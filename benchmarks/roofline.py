@@ -1,0 +1,102 @@
+"""Roofline analysis: three-term roofline per (arch x shape x mesh) from the
+dry-run's compiled artifacts (results/dryrun/*.json — run
+``python -m repro.launch.dryrun --all --out results/dryrun`` first).
+
+Terms (per device, TPU v5e constants):
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO bytes-accessed / 819e9
+  collective = HLO collective link-bytes / 50e9
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def _recompute_useful(rows: list[dict]) -> None:
+    """Recompute useful-FLOPs with the embedding table excluded (older
+    sweeps counted it; lookups are gathers, not MACs)."""
+    try:
+        from repro import configs
+        from repro.configs import base as cb
+    except ImportError:
+        return
+    shapes = {s.name: s for s in cb.ALL_SHAPES}
+    for r in rows:
+        try:
+            cfg = configs.get(r["arch"])
+            sh = shapes[r["shape"]]
+        except KeyError:
+            continue
+        tokens = sh.global_batch * (sh.seq_len if sh.kind != "decode" else 1)
+        n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+        mf = (6 if sh.kind == "train" else 2) * n * tokens / r["n_chips"]
+        if r.get("hlo_flops_per_device"):
+            r["model_flops_per_device"] = mf
+            r["useful_flops_ratio"] = mf / r["hlo_flops_per_device"]
+
+
+def load() -> list[dict]:
+    path = os.path.join(RESULTS, "summary.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rows = [r for r in json.load(f) if r.get("status") == "ok"]
+        _recompute_useful(rows)
+        return rows
+    rows = []
+    for p in glob.glob(os.path.join(RESULTS, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'GiB/dev':>8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>10s} {'useful%':>8s} {'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r["multi_pod"])):
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {mesh:8s} "
+            f"{r['per_device_gib']:8.2f} {r['compute_s']:10.3e} "
+            f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+            f"{r['bottleneck']:>10s} "
+            f"{100 * r['useful_flops_ratio']:8.1f} "
+            f"{100 * r['roofline_fraction']:9.1f}")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    rows = load()
+    if not rows:
+        return {"error": f"no dry-run results under {RESULTS}"}
+    print(table(rows))
+    single = [r for r in rows if not r["multi_pod"]]
+    bounds = {}
+    for r in single:
+        bounds[r["bottleneck"]] = bounds.get(r["bottleneck"], 0) + 1
+    worst = min(single, key=lambda r: r["roofline_fraction"])
+    best = max(single, key=lambda r: r["roofline_fraction"])
+    return {
+        "cells": len(rows),
+        "single_pod_cells": len(single),
+        "bottleneck_histogram": bounds,
+        "worst_roofline": (worst["arch"], worst["shape"],
+                           round(worst["roofline_fraction"], 4)),
+        "best_roofline": (best["arch"], best["shape"],
+                          round(best["roofline_fraction"], 4)),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,66 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the headline metric of
+that artifact).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _row(name, fn, derive):
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(out)}")
+    return out
+
+
+def main() -> None:
+    from benchmarks import (fig3_column_sums, fig12_efficiency, fig13_retrain,
+                            fig14_ablation, fig15_noise, lm_on_pim, roofline,
+                            table1_slicing, table2_titanium, table4_accuracy)
+    print("name,us_per_call,derived")
+    _row("table1_slicing", table1_slicing.run,
+         lambda o: f"bits/MAC x converts/MAC tradeoff over {len(o)} slicings")
+    _row("table2_titanium", table2_titanium.run,
+         lambda o: "law_matches=" + str(all(v["law_matches"]
+                                            for v in o.values())))
+    _row("fig3_column_sums", fig3_column_sums.run,
+         lambda o: "le7b: " + " -> ".join(
+             f"{o[k]['le7b']:.2f}" for k in
+             ["baseline_unsigned_4b", "center_offset", "adaptive_slicing",
+              "recovery_cycles"]))
+    _row("fig12_efficiency", fig12_efficiency.run,
+         lambda o: f"geomean eff {o['geomean']['efficiency_x']:.2f}x "
+                   f"thpt {o['geomean']['throughput_x']:.2f}x "
+                   f"(paper 3.9/2.0)")
+    _row("fig13_retrain", fig13_retrain.run,
+         lambda o: f"RAELLA {o['raella_vs_isaac']['efficiency_x']:.2f}x vs "
+                   f"FORMS {o['forms8_vs_isaac']['efficiency_x']:.2f}x / "
+                   f"TIMELY {o['timely_vs_isaac']['efficiency_x']:.2f}x "
+                   f"(no retraining)")
+    _row("fig14_ablation", fig14_ablation.run,
+         lambda o: "converts/MAC " + " -> ".join(
+             f"{v['ideal_converts_per_mac']:.3f}" for v in o.values())
+         + " (paper 0.25->0.063->0.047->0.018)")
+    _row("table4_accuracy", table4_accuracy.run,
+         lambda o: f"sec4.2.1 err C+O {o['center']['sec4.2.1_error']} vs "
+                   f"Z+O {o['zero']['sec4.2.1_error']}; acc drop "
+                   f"{o['center']['accuracy_drop_pts']} vs "
+                   f"{o['zero']['accuracy_drop_pts']} pts")
+    _row("fig15_noise", fig15_noise.run,
+         lambda o: "acc@12% noise: " + " ".join(
+             f"{k}={v:.2f}" for k, v in o["noise_0.12"].items()
+             if isinstance(v, float)))
+    _row("lm_on_pim", lm_on_pim.run,
+         lambda o: f"assigned-LM zoo on RAELLA silicon: "
+                   f"{o['geomean_efficiency_x']}x geomean vs 8b-ISAAC")
+    _row("roofline", roofline.run,
+         lambda o: f"{o.get('cells', 0)} cells, "
+                   f"bottlenecks {o.get('bottleneck_histogram')}")
+
+
+if __name__ == "__main__":
+    main()

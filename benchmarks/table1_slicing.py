@@ -1,0 +1,35 @@
+"""Table 1: slicing tradeoffs — bits/MAC vs ADC converts/MAC, exact."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import slicing as sl
+
+
+def run() -> list[dict]:
+    """2b input x 2b weight, every slicing combination (paper Table 1)."""
+    rows = []
+    for iw, islices in [("i2", ((2,),)), ("i1", ((1, 1),))]:
+        pass
+    cases = [
+        ("unsliced", (2,), (2,)),
+        ("input-sliced", (1, 1), (2,)),
+        ("weight-sliced", (2,), (1, 1)),
+        ("both-sliced", (1, 1), (1, 1)),
+    ]
+    for name, i_s, w_s in cases:
+        bits_per_mac = max(i_s) * max(w_s)
+        converts_per_mac = len(i_s) * len(w_s)
+        rows.append({"case": name, "bits_per_mac": bits_per_mac,
+                     "converts_per_mac": converts_per_mac,
+                     "cycles": len(i_s), "columns": len(w_s)})
+    # paper's numbers: bits/MAC 4,2,2,1 and converts/MAC 1(x4 scale),2,2,4
+    assert [r["bits_per_mac"] for r in rows] == [4, 2, 2, 1]
+    assert [r["converts_per_mac"] for r in rows] == [1, 2, 2, 4]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

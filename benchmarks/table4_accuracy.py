@@ -1,0 +1,69 @@
+"""Table 4: Center+Offset vs Zero+Offset fidelity + accuracy, no retraining.
+
+The paper's ImageNet/SQuAD models are unavailable offline, so this
+reproduces the mechanism end-to-end on a classifier trained in-repo whose
+bias-free weights carry per-channel offsets (the paper's Fig. 5 regime):
+
+  - the §4.2.1 fidelity metric (mean |8b output error| on nonzero outputs),
+    where Zero+Offset blows through the 0.09 error budget and Center+Offset
+    stays under it;
+  - ADC speculation-failure and recovery-saturation rates (the causal chain
+    behind Table 4's accuracy drops);
+  - end-to-end accuracy. On this small, margin-rich task both encodings
+    survive argmax (ReLU masks negative-side saturation); the paper's
+    ImageNet compact models (1000 classes, tight margins) lose up to 16.4
+    points with Zero+Offset — we quote those alongside.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import mlp_accuracy, pim_layer_fn, trained_mlp
+from repro.core import adaptive
+from repro.core import pim_linear as plin
+
+PAPER = {  # (Center+Offset drop, Zero+Offset drop) from the paper's Table 4
+    "ResNet18": (0.06, 0.16), "ResNet50": (-0.08, 0.30),
+    "MobileNetV2": (0.03, 10.17), "ShuffleNetV2": (0.14, 16.36),
+    "GoogLeNet": (-0.02, 1.53), "InceptionV3": (-0.03, 3.72),
+    "BERT-Large": (0.12, 0.46),
+}
+
+
+def run() -> dict:
+    mlp, ds = trained_mlp(d_in=512, hidden=512, n_classes=8, steps=1500)
+    acc_f = mlp_accuracy(mlp, ds)
+    out = {"float_accuracy": acc_f}
+    x_cal, _ = ds.batch(77, 10)
+    for mode in ["center", "zero"]:
+        err = adaptive.measure_error(mlp.w1, x_cal, (4, 2, 2),
+                                     encode_mode=mode)
+        plan = plin.prepare(mlp.w1, x_cal, weight_slicing=(4, 2, 2),
+                            speculation=True, encode_mode=mode)
+        _, stats = plin.forward_exact(x_cal, plan, return_stats=True)
+        st = stats[0]
+        layer = pim_layer_fn(mlp, ds, encode_mode=mode, speculation=True)
+        acc = mlp_accuracy(mlp, ds, layer_fn=layer)
+        out[mode] = {
+            "sec4.2.1_error": round(err, 4),
+            "under_budget_0.09": err < 0.09,
+            "spec_failure_rate": round(float(st.failure_rate), 3),
+            "recovery_saturations": int(st.recovery_saturations),
+            "accuracy": acc,
+            "accuracy_drop_pts": round(100 * (acc_f - acc), 2),
+        }
+    c, z = out["center"], out["zero"]
+    assert c["sec4.2.1_error"] < 0.09, "C+O must satisfy the error budget"
+    assert z["sec4.2.1_error"] > 3 * c["sec4.2.1_error"], \
+        "Z+O fidelity error must blow up vs C+O (Table 4 mechanism)"
+    assert z["spec_failure_rate"] > c["spec_failure_rate"]
+    assert c["accuracy_drop_pts"] < 2.0
+    out["paper_table4_drops_center_vs_zero"] = PAPER
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(k, v)

@@ -1,0 +1,15 @@
+"""Center+Offset vs Zero+Offset on a trained classifier (Table 4 mechanism).
+
+  PYTHONPATH=src:. python examples/pim_accuracy_demo.py
+"""
+
+from benchmarks.table4_accuracy import run
+
+
+def main() -> None:
+    for k, v in run().items():
+        print(k, v)
+
+
+if __name__ == "__main__":
+    main()

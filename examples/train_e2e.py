@@ -1,0 +1,58 @@
+"""End-to-end training driver: train a ~100M-param qwen1.5-0.5b-family model
+on the synthetic Markov LM for a few hundred steps with checkpointing and
+straggler monitoring.
+
+  PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--full-100m]
+
+Default runs a CPU-sized model so the example finishes in ~2 minutes; with
+--full-100m it builds the ~100M-parameter variant (slow on CPU; sized for a
+single accelerator host).
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as T
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt
+from repro.train import train_loop as tl
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    base = configs.get("qwen1.5-0.5b")
+    if args.full_100m:
+        cfg = dataclasses.replace(
+            base, name="qwen-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=12, d_ff=2048, vocab_size=8192, head_dim=64,
+            remat=False)
+    else:
+        cfg = base.reduced(n_layers=4, d_model=128, d_ff=256, vocab_size=256,
+                           n_heads=4, n_kv_heads=4, head_dim=32)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128, batch_size=16,
+                       seed=0, concentration=0.1)
+    print(f"synthetic LM entropy floor: {data.entropy_floor():.3f} nats")
+    opt_cfg = opt.AdamWConfig(lr=2e-2, warmup_steps=20,
+                              total_steps=args.steps)
+    mon = ft.StragglerMonitor()
+    state = tl.train(cfg, opt_cfg, data.iterator(0), num_steps=args.steps,
+                     hooks=[mon.hook()], log_every=25)
+    final = T.lm_loss(state.params, cfg, data.batch(10_000))
+    print(f"final eval loss {float(final):.3f} "
+          f"(uniform {float(jax.numpy.log(cfg.vocab_size)):.3f}, "
+          f"floor ~{data.entropy_floor():.3f}); "
+          f"stragglers flagged: {len(mon.events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Assigned architecture registry: --arch <id> resolves here."""
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ArchConfig,
+    InputShape,
+)
+from repro.configs.phi3_5_moe_42b import CONFIG as PHI35_MOE
+from repro.configs.llama4_maverick_400b import CONFIG as LLAMA4_MAVERICK
+from repro.configs.jamba_1_5_large_398b import CONFIG as JAMBA_15_LARGE
+from repro.configs.qwen1_5_110b import CONFIG as QWEN15_110B
+from repro.configs.yi_6b import CONFIG as YI_6B
+from repro.configs.qwen2_5_32b import CONFIG as QWEN25_32B
+from repro.configs.qwen1_5_0_5b import CONFIG as QWEN15_05B
+from repro.configs.hubert_xlarge import CONFIG as HUBERT_XLARGE
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.chameleon_34b import CONFIG as CHAMELEON_34B
+from repro.configs.raella_bert_large import CONFIG as RAELLA_BERT_LARGE
+
+REGISTRY: dict[str, ArchConfig] = {
+    c.name: c for c in [
+        PHI35_MOE, LLAMA4_MAVERICK, JAMBA_15_LARGE, QWEN15_110B, YI_6B,
+        QWEN25_32B, QWEN15_05B, HUBERT_XLARGE, RWKV6_3B, CHAMELEON_34B,
+        RAELLA_BERT_LARGE,
+    ]
+}
+
+ASSIGNED = tuple(n for n in REGISTRY if n != "raella-bert-large")
+
+
+def get(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def runnable_shapes(cfg: ArchConfig) -> tuple[InputShape, ...]:
+    """Assignment skip rules (see DESIGN.md §4):
+    - encoder-only archs have no decode step -> skip decode shapes;
+    - long_500k requires sub-quadratic attention -> SSM/hybrid only."""
+    shapes = []
+    for s in ALL_SHAPES:
+        if s.kind == "decode" and not cfg.causal:
+            continue  # encoder-only: no autoregressive step
+        if s.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            continue  # pure full-attention archs skip 500k decode
+        shapes.append(s)
+    return tuple(shapes)

@@ -1,0 +1,27 @@
+"""RAELLA's contribution as a composable JAX library.
+
+Submodules:
+  slicing        bit-slice arithmetic (D(h,l,x), 108 slicings)
+  center_offset  Eq. 2 center solve + 2T2R offset encoding
+  adc            7b saturating ADC + analog noise model
+  crossbar       bit-exact 512-row crossbar forward
+  speculation    dynamic input slicing (speculate/recover)
+  adaptive       Algorithm 1 adaptive weight slicing
+  pim_linear     RaellaLinear layer (exact | fast | off)
+  energy         Titanium Law + component energy/throughput model
+  mapping        layer -> crossbar/IMA/tile mapping & replication
+  workloads      the paper's seven evaluation DNNs
+"""
+
+from repro.core import (  # noqa: F401
+    adaptive,
+    adc,
+    center_offset,
+    crossbar,
+    energy,
+    mapping,
+    pim_linear,
+    slicing,
+    speculation,
+    workloads,
+)

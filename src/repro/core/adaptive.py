@@ -1,0 +1,124 @@
+"""Adaptive Weight Slicing — the paper's Algorithm 1 (§4.2).
+
+For each DNN layer, pick the weight slicing with the *fewest slices* whose
+measured error is under the error budget (0.09: "one in eleven 8b outputs
+off by one on average"), tie-broken by lower error. Error is measured
+empirically: run ~10 calibration inputs through the bit-exact crossbar
+simulation (1b input slices, per the paper), requantize to 8b output codes,
+and compare against the ideal 8b-quantized layer on nonzero expected outputs.
+
+The search is noise-aware: passing a noise level makes the chosen slicing
+automatically more conservative (Fig. 15's adaptivity claim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import crossbar as xbar
+from repro.core import pim_linear as pl
+from repro.core import slicing as sl
+from repro.quant import quantize as q
+
+ERROR_BUDGET = 0.09  # paper §4.2.1
+
+
+@dataclasses.dataclass
+class SlicingChoice:
+    slicing: tuple[int, ...]
+    error: float
+    n_slices: int
+    all_errors: dict  # slicing -> measured error (for the tried subset)
+
+
+def measure_error(w: jnp.ndarray, x_cal: jnp.ndarray,
+                  weight_slicing: Sequence[int], *,
+                  adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+                  encode_mode: str = "center",
+                  noise_level: float = 0.0,
+                  key: jax.Array | None = None,
+                  relu_out: bool = False) -> float:
+    """Mean |8b-output error| on nonzero expected outputs (paper §4.2.1)."""
+    plan = pl.prepare(w, x_cal, weight_slicing=weight_slicing, adc=adc,
+                      speculation=False, encode_mode=encode_mode,
+                      relu_out=relu_out)
+    # paper: 1b input slices while comparing weight slicings
+    y_sim = pl.forward_exact(x_cal, plan, input_slicing=(1,) * sl.INPUT_BITS,
+                             noise_level=noise_level, key=key)
+    y_ref = pl.forward_int_reference(x_cal, plan)
+    out_sim = pl.output_codes(y_sim, plan, relu=relu_out)
+    out_ref = pl.output_codes(y_ref, plan, relu=relu_out)
+    nz = out_ref != 0
+    err = jnp.abs(out_sim - out_ref).astype(jnp.float32)
+    denom = jnp.maximum(nz.sum(), 1)
+    return float(jnp.where(nz, err, 0.0).sum() / denom)
+
+
+def candidate_slicings(max_slices: int = 8,
+                       full_search: bool = False) -> tuple[tuple[int, ...], ...]:
+    """Slicings ordered by (n_slices, MSB-heaviness).
+
+    full_search=True iterates all 108 (paper). Otherwise a pruned front: for
+    each slice count, MSB-first-largest layouts — these dominate in practice
+    because high-order weight bits are sparse after centering (Fig. 8), so
+    giving the MSB slice the most bits is the efficient direction.
+    """
+    all_s = sl.enumerate_slicings()
+    if full_search:
+        return tuple(sorted(all_s, key=lambda s: (len(s), [-b for b in s])))
+    pruned = [s for s in all_s
+              if list(s) == sorted(s, reverse=True)]  # non-increasing widths
+    return tuple(sorted(pruned, key=lambda s: (len(s), [-b for b in s])))
+
+
+def find_best_slicing(w: jnp.ndarray, x_cal: jnp.ndarray, *,
+                      error_budget: float = ERROR_BUDGET,
+                      adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+                      encode_mode: str = "center",
+                      noise_level: float = 0.0,
+                      key: jax.Array | None = None,
+                      relu_out: bool = False,
+                      full_search: bool = False,
+                      last_layer: bool = False) -> SlicingChoice:
+    """Algorithm 1's FindBestSlicing.
+
+    last_layer=True forces the most conservative 1b-per-slice slicing
+    (paper: the last layer has an outsized accuracy effect).
+    """
+    if last_layer:
+        s = (1,) * sl.WEIGHT_BITS
+        e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
+                          noise_level=noise_level, key=key, relu_out=relu_out)
+        return SlicingChoice(s, e, len(s), {s: e})
+    errors: dict = {}
+    best = None
+    cands = candidate_slicings(full_search=full_search)
+    cur_n = None
+    group_best: tuple[float, tuple[int, ...]] | None = None
+    for s in cands:
+        if cur_n is not None and len(s) != cur_n and group_best is not None:
+            break  # a smaller-slice-count group already satisfied the budget
+        cur_n = len(s)
+        e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
+                          noise_level=noise_level, key=key, relu_out=relu_out)
+        errors[s] = e
+        if e < error_budget and (group_best is None or e < group_best[0]):
+            group_best = (e, s)
+    if group_best is None:
+        # nothing under budget: fall back to the most conservative slicing
+        s = (1,) * sl.WEIGHT_BITS
+        e = errors.get(s)
+        if e is None:
+            e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
+                              noise_level=noise_level, key=key, relu_out=relu_out)
+            errors[s] = e
+        group_best = (e, s)
+    e, s = group_best
+    return SlicingChoice(slicing=s, error=e, n_slices=len(s), all_errors=errors)

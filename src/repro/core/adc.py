@@ -1,0 +1,73 @@
+"""ADC model (paper §3, §4.3, §7.2).
+
+RAELLA's ADC captures the 7 least-significant bits of a signed column sum
+with a step size of one sliced-product LSB: in-range sums are converted with
+*perfect* fidelity; out-of-range sums saturate at [-64, 63]. Saturation at
+either bound is detectable (used as the speculation-failure signal).
+
+The analog noise model for the Fig. 15 ablation follows the paper: the
+column sum is N(mu, sigma^2) with mu = N+ - N- (ideal signed sum) and
+sigma = E * sqrt(N+ + N-), where N+/N- are the positive / negative
+sliced-product sums and E is the noise level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCConfig:
+    bits: int = 7
+    signed: bool = True
+
+    @property
+    def lo(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def hi(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+
+RAELLA_ADC = ADCConfig(bits=7, signed=True)      # [-64, 63]
+ISAAC_ADC = ADCConfig(bits=8, signed=False)      # ISAAC: unsigned arithmetic
+
+
+def convert(col_sum: jnp.ndarray,
+            cfg: ADCConfig = RAELLA_ADC,
+            *,
+            noise_level: float = 0.0,
+            pos_sum: jnp.ndarray | None = None,
+            neg_sum: jnp.ndarray | None = None,
+            key: jax.Array | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Convert analog column sums to digital. Returns (value, saturated).
+
+    value: int32 clipped to [cfg.lo, cfg.hi]; saturated: bool — output equals
+    either bound (the paper's detection rule; exact-at-bound values flag as
+    failures too, which is faithful).
+    """
+    x = col_sum.astype(jnp.float32)
+    if noise_level and key is not None:
+        if pos_sum is None or neg_sum is None:
+            raise ValueError("noise model needs pos/neg sliced-product sums")
+        sigma = noise_level * jnp.sqrt((pos_sum + neg_sum).astype(jnp.float32))
+        x = x + sigma * jax.random.normal(key, x.shape, dtype=jnp.float32)
+    q = jnp.round(x).astype(jnp.int32)
+    out = jnp.clip(q, cfg.lo, cfg.hi)
+    saturated = (out == cfg.lo) | (out == cfg.hi)
+    return out, saturated
+
+
+def required_bits(col_sum: jnp.ndarray, signed: bool = True) -> jnp.ndarray:
+    """Resolution (bits) needed to represent each column sum exactly."""
+    mag = jnp.abs(col_sum).astype(jnp.int32)
+    bits = jnp.ceil(jnp.log2(jnp.maximum(mag, 1).astype(jnp.float32) + 1.0))
+    return bits.astype(jnp.int32) + (1 if signed else 0)

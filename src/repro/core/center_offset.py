@@ -1,0 +1,186 @@
+"""Center+Offset weight encoding (paper §4.1).
+
+Weights live in the unsigned 8b domain [0, 255] on-crossbar (signed int8
+weights are shifted by +128; the shift folds into the digital center term).
+For each *filter segment* — the rows of one dot product that fit in a single
+512-row crossbar (paper footnote 5) — we pick an integer center
+``phi in {1..255}`` minimizing Eq. 2:
+
+    argmin_phi  sum_j 2^{l_j} * ( sum_w D(h_j, l_j, w - phi) )^4
+
+The residuals ``r = w - phi`` are then sign-magnitude sliced; slice values
+land in ``[-(2^b - 1), 2^b - 1]`` and are programmed into the positive /
+negative ReRAM of each 2T2R pair.
+
+Implementation note: Eq. 2's inner sum depends only on the *histogram* of the
+column's weight values, so we evaluate all 255 candidate centers with one
+(256-bin histogram) x (255 x 256 D-table) product per slice — no per-row
+work in the phi scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import slicing as sl
+
+ROWS_PER_CROSSBAR = 512
+CENTER_CANDIDATES = np.arange(1, 256)  # paper: phi in {1..255}
+COST_POWER = 4  # paper: empirically chosen power
+
+
+@functools.lru_cache(maxsize=None)
+def _d_table(h: int, l: int) -> np.ndarray:
+    """D(h, l, w - phi) for all (phi in 1..255, w in 0..255): (255, 256) int32."""
+    phi = CENTER_CANDIDATES[:, None]  # (255, 1)
+    w = np.arange(256)[None, :]  # (1, 256)
+    r = w - phi
+    mask = (1 << (h - l + 1)) - 1
+    return (np.sign(r) * ((np.abs(r) >> l) & mask)).astype(np.int32)
+
+
+def column_histograms(w_u8: np.ndarray, row_mask: np.ndarray | None = None) -> np.ndarray:
+    """Per-column 256-bin histograms. w_u8: (rows, cols) in [0,255] -> (cols, 256)."""
+    rows, cols = w_u8.shape
+    hist = np.zeros((cols, 256), dtype=np.int32)
+    cidx = np.broadcast_to(np.arange(cols)[None, :], (rows, cols))
+    if row_mask is not None:
+        keep = np.broadcast_to(row_mask[:, None], (rows, cols))
+        np.add.at(hist, (cidx[keep], w_u8[keep]), 1)
+    else:
+        np.add.at(hist, (cidx.ravel(), w_u8.ravel().astype(np.int64)), 1)
+    return hist
+
+
+def eq2_costs(hist: np.ndarray, slicing: Sequence[int]) -> np.ndarray:
+    """Eq. 2 cost for every candidate center. hist: (cols, 256) -> (cols, 255)."""
+    costs = np.zeros((hist.shape[0], len(CENTER_CANDIDATES)), dtype=np.float64)
+    for (h, l) in sl.slice_bounds(slicing, sl.WEIGHT_BITS):
+        dtab = _d_table(h, l)  # (255 phi, 256 w)
+        col_sum = hist.astype(np.float64) @ dtab.T.astype(np.float64)  # (cols, 255)
+        costs += (2.0 ** l) * col_sum ** COST_POWER
+    return costs
+
+
+def solve_centers(w_u8: np.ndarray, slicing: Sequence[int],
+                  row_mask: np.ndarray | None = None) -> np.ndarray:
+    """Optimal per-column center phi. w_u8: (rows<=512, cols) -> (cols,) int32."""
+    hist = column_histograms(np.asarray(w_u8, dtype=np.int64), row_mask)
+    costs = eq2_costs(hist, slicing)
+    return CENTER_CANDIDATES[np.argmin(costs, axis=1)].astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodedWeights:
+    """A DNN layer's weights, Center+Offset encoded and sliced for crossbars.
+
+    planes:   (n_slices, n_seg, ROWS, cols) int8 — signed sign-magnitude slice
+              values in [-(2^b-1), 2^b-1]; zero-padded rows contribute nothing.
+    centers:  (n_seg, cols) int32 — per filter-segment centers (unsigned domain).
+    slicing:  weight slicing tuple, MSB-first.
+    shifts:   per-slice recombination shift 2**l.
+    rows:     true (unpadded) input length.
+    """
+    planes: np.ndarray
+    centers: np.ndarray
+    slicing: tuple[int, ...]
+    shifts: tuple[int, ...]
+    rows: int
+    rows_per_xbar: int = ROWS_PER_CROSSBAR
+
+    @property
+    def n_slices(self) -> int:
+        return len(self.slicing)
+
+    @property
+    def n_segments(self) -> int:
+        return self.planes.shape[1]
+
+    @property
+    def cols(self) -> int:
+        return self.planes.shape[3]
+
+    def crossbar_columns(self) -> int:
+        """Physical crossbar columns consumed per filter (= n_slices)."""
+        return self.n_slices
+
+
+def _segment(w_u8: np.ndarray, rows_per_xbar: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split (rows, cols) into (n_seg, rows_per_xbar, cols) with zero pad + mask."""
+    rows, cols = w_u8.shape
+    n_seg = -(-rows // rows_per_xbar)
+    pad = n_seg * rows_per_xbar - rows
+    wp = np.pad(w_u8, ((0, pad), (0, 0)))
+    mask = np.pad(np.ones(rows, dtype=bool), (0, pad))
+    return (wp.reshape(n_seg, rows_per_xbar, cols),
+            mask.reshape(n_seg, rows_per_xbar))
+
+
+def encode(w_u8: np.ndarray, slicing: Sequence[int],
+           mode: str = "center",
+           rows_per_xbar: int = ROWS_PER_CROSSBAR) -> EncodedWeights:
+    """Encode weights for the crossbar.
+
+    mode='center': Center+Offset (Eq. 2 optimal centers).
+    mode='zero':   Zero+Offset differential (paper's Table-4 baseline;
+                   center fixed at 128 = zero in the signed domain).
+    mode='unsigned': ISAAC-style raw unsigned weights (ablation baseline;
+                   pair with an unsigned ADC).
+    """
+    w_u8 = np.asarray(w_u8, dtype=np.int64)
+    if w_u8.ndim != 2:
+        raise ValueError("expected (rows, cols) weight matrix")
+    segs, seg_mask = _segment(w_u8, rows_per_xbar)
+    n_seg, R, cols = segs.shape
+    centers = np.zeros((n_seg, cols), dtype=np.int32)
+    planes = np.zeros((len(slicing), n_seg, R, cols), dtype=np.int8)
+    bounds = sl.slice_bounds(slicing, sl.WEIGHT_BITS)
+    for s in range(n_seg):
+        if mode == "center":
+            centers[s] = solve_centers(segs[s], slicing, row_mask=seg_mask[s])
+        elif mode == "zero":
+            centers[s] = 128
+        elif mode == "unsigned":
+            centers[s] = 0  # ISAAC-style: raw unsigned weights, no signed 2T2R
+        else:
+            raise ValueError(f"unknown encode mode {mode!r}")
+        r = segs[s] - centers[s][None, :]
+        r = np.where(seg_mask[s][:, None], r, 0)  # padded rows -> no offsets
+        for j, (h, l) in enumerate(bounds):
+            mask = (1 << (h - l + 1)) - 1
+            planes[j, s] = (np.sign(r) * ((np.abs(r) >> l) & mask)).astype(np.int8)
+    return EncodedWeights(
+        planes=planes, centers=centers, slicing=tuple(slicing),
+        shifts=sl.slice_shifts(slicing, sl.WEIGHT_BITS), rows=int(w_u8.shape[0]),
+        rows_per_xbar=rows_per_xbar)
+
+
+def decode(enc: EncodedWeights) -> np.ndarray:
+    """Reconstruct the unsigned 8b weight matrix (exactness check)."""
+    n_slices, n_seg, R, cols = enc.planes.shape
+    r = np.zeros((n_seg, R, cols), dtype=np.int64)
+    for j, l in enumerate(enc.shifts):
+        r += enc.planes[j].astype(np.int64) << l
+    w = r + enc.centers[:, None, :]
+    w = w.reshape(n_seg * R, cols)[: enc.rows]
+    return w
+
+
+def center_term(x_u8: jnp.ndarray, enc: EncodedWeights) -> jnp.ndarray:
+    """The digital term phi * sum(I) of Eq. 1, per segment, summed.
+
+    x_u8: (..., rows) unsigned 8b inputs -> (..., cols) int32.
+    """
+    rows_pad = enc.n_segments * enc.rows_per_xbar
+    pad = rows_pad - x_u8.shape[-1]
+    xp = jnp.pad(x_u8.astype(jnp.int32), [(0, 0)] * (x_u8.ndim - 1) + [(0, pad)])
+    xs = xp.reshape(x_u8.shape[:-1] + (enc.n_segments, enc.rows_per_xbar))
+    seg_sums = xs.sum(axis=-1)  # (..., n_seg)
+    return jnp.einsum("...s,sc->...c", seg_sums.astype(jnp.int32),
+                      jnp.asarray(enc.centers, dtype=jnp.int32))

@@ -1,0 +1,138 @@
+"""Functional 512-row 2T2R crossbar simulator (paper §4.1.4, §5.1).
+
+Bit-exact integer model of RAELLA's analog datapath:
+
+  inputs (unsigned 8b, temporally sliced)  x  weights (Center+Offset encoded,
+  spatially sliced, signed sign-magnitude planes)  ->  per-(input-slice,
+  weight-slice) signed column sums over <=512 rows  ->  ADC (7b clamp, with
+  optional analog noise)  ->  digital shift+add  ->  int32 psums
+  (+ the digital center term phi * sum(I)).
+
+Everything is jit-able jnp; the Pallas kernel in repro.kernels.sliced_crossbar
+implements the same contraction for TPU and is verified against
+``repro.kernels.ref`` which calls into this module.
+
+Signed inputs are handled the paper's way: two passes over max(x, 0) and
+max(-x, 0) (see pim_linear), which also generates the input bit sparsity the
+paper exploits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import slicing as sl
+
+
+@dataclasses.dataclass
+class CrossbarStats:
+    """Fidelity / work counters for one forward pass (python-side, jit-safe)."""
+    adc_converts: jnp.ndarray        # scalar int — ADC conversions performed
+    saturations: jnp.ndarray         # scalar int — saturated conversions
+    conversions_possible: jnp.ndarray  # scalar int — converts a no-spec design needs
+    macs: int                        # logical 8b MACs computed
+
+
+def _segment_inputs(x_u8: jnp.ndarray, n_seg: int, rows_per_xbar: int) -> jnp.ndarray:
+    """(..., rows) -> (..., n_seg, rows_per_xbar) zero-padded."""
+    pad = n_seg * rows_per_xbar - x_u8.shape[-1]
+    xp = jnp.pad(x_u8.astype(jnp.int32), [(0, 0)] * (x_u8.ndim - 1) + [(0, pad)])
+    return xp.reshape(x_u8.shape[:-1] + (n_seg, rows_per_xbar))
+
+
+def column_sums(x_slice: jnp.ndarray, plane: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Signed column sums of one (input-slice, weight-slice) pair.
+
+    x_slice: (B, n_seg, R) int32 unsigned slice values.
+    plane:   (n_seg, R, C) int8 signed slice values.
+    Returns (pos, neg) int32 of shape (B, n_seg, C): positive / negative
+    sliced-product sums (their difference is the ideal column sum; both are
+    needed for the noise model and 2T2R energy accounting).
+    """
+    p = plane.astype(jnp.int32)
+    pos = jnp.einsum("bsr,src->bsc", x_slice, jnp.maximum(p, 0),
+                     preferred_element_type=jnp.int32)
+    neg = jnp.einsum("bsr,src->bsc", x_slice, jnp.maximum(-p, 0),
+                     preferred_element_type=jnp.int32)
+    return pos, neg
+
+
+def forward(x_u8: jnp.ndarray,
+            enc: co.EncodedWeights,
+            input_slicing: Sequence[int] = (1,) * 8,
+            adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+            *,
+            noise_level: float = 0.0,
+            key: jax.Array | None = None,
+            ideal: bool = False) -> tuple[jnp.ndarray, CrossbarStats]:
+    """Full-fidelity-path crossbar forward (static input slicing, no speculation).
+
+    x_u8: (B, rows) unsigned 8b inputs. Returns (psum int32 (B, cols), stats).
+    ``ideal=True`` skips the ADC entirely (infinite-resolution reference).
+    """
+    B = x_u8.shape[0]
+    n_seg, R = enc.n_segments, enc.rows_per_xbar
+    xs = _segment_inputs(x_u8, n_seg, R)  # (B, n_seg, R)
+    in_bounds = sl.slice_bounds(input_slicing, sl.INPUT_BITS)
+    planes = jnp.asarray(enc.planes)  # (n_w, n_seg, R, C)
+
+    psum = co.center_term(x_u8, enc)  # (B, C) int32 — digital center term
+    total_converts = 0
+    saturations = jnp.zeros((), jnp.int32)
+    n_keys = len(in_bounds) * enc.n_slices
+    keys = (jax.random.split(key, n_keys) if key is not None else [None] * n_keys)
+    ki = 0
+    for (hi, li) in in_bounds:
+        x_sl = sl.crop_unsigned(xs, hi, li)  # (B, n_seg, R)
+        for j in range(enc.n_slices):
+            lw = enc.shifts[j]
+            pos, neg = column_sums(x_sl, planes[j])
+            cs = pos - neg
+            if ideal:
+                val = cs
+            else:
+                val, sat = adc_lib.convert(
+                    cs, adc, noise_level=noise_level,
+                    pos_sum=pos, neg_sum=neg, key=keys[ki])
+                saturations = saturations + sat.sum()
+            ki += 1
+            psum = psum + (val.sum(axis=1) << (li + lw))
+            total_converts += B * n_seg * enc.cols
+    stats = CrossbarStats(
+        adc_converts=jnp.asarray(total_converts, jnp.int32),
+        saturations=saturations,
+        conversions_possible=jnp.asarray(total_converts, jnp.int32),
+        macs=B * enc.rows * enc.cols)
+    return psum, stats
+
+
+def matmul_reference(x_u8: jnp.ndarray, w_u8: jnp.ndarray) -> jnp.ndarray:
+    """Ideal integer matmul in the unsigned-weight domain: x @ w, int32."""
+    return jnp.einsum("br,rc->bc", x_u8.astype(jnp.int32), w_u8.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def column_sum_distribution(x_u8: jnp.ndarray,
+                            enc: co.EncodedWeights,
+                            input_slicing: Sequence[int],
+                            adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC):
+    """All raw (pre-ADC) column sums + fraction in ADC range (Fig. 3 harness)."""
+    n_seg, R = enc.n_segments, enc.rows_per_xbar
+    xs = _segment_inputs(x_u8, n_seg, R)
+    planes = jnp.asarray(enc.planes)
+    sums = []
+    for (hi, li) in sl.slice_bounds(input_slicing, sl.INPUT_BITS):
+        x_sl = sl.crop_unsigned(xs, hi, li)
+        for j in range(enc.n_slices):
+            pos, neg = column_sums(x_sl, planes[j])
+            sums.append((pos - neg).reshape(-1))
+    cs = jnp.concatenate(sums)
+    in_range = jnp.mean((cs >= adc.lo) & (cs <= adc.hi))
+    return cs, in_range

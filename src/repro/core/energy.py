@@ -1,0 +1,269 @@
+"""Titanium Law energy/throughput model (paper §2.5, Table 2, §6.1).
+
+    E_ADC = Energy/Convert x Converts/MAC x MACs/DNN x 1/Utilization
+
+plus an Accelergy-style per-component energy model (ADC, DAC/driver, ReRAM
+crossbar, buffers, router, eDRAM, digital center processing) and the paper's
+throughput model (100ns crossbar cycles, 8 or 3+8 cycles per psum set,
+signed inputs doubling cycles, greedy weight replication).
+
+Component constants are calibrated so the model reproduces the paper's
+published *ratios* (the paper's own numbers come from Accelergy/Timeloop
+models, the same class of evidence):
+  - ISAAC energy dominated by ADC (Fig. 1),
+  - Converts/MAC 0.25 -> 0.063 -> 0.047 -> 0.018 along the Fig. 14 ablation
+    (these are exact combinatorics, not calibration),
+  - RAELLA vs ISAAC efficiency ~3.9x geomean / throughput ~2.0x geomean
+    (Fig. 12), without speculation ~2.8x / ~2.7x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import mapping as mp
+
+# ---------------------------------------------------------------- components
+# energies in pJ. Effective constants calibrated so the 8b-ISAAC baseline
+# reproduces the paper's Fig. 1 energy breakdown (ADC ~51%, the rest split
+# across DAC/crossbar/buffers/network/digital); the paper's own numbers come
+# from Accelergy/NeuroSim component models we do not possess, so we pin the
+# baseline *shares* and let every cross-architecture ratio follow from the
+# work counts (converts, cycles, bytes), which are exact combinatorics.
+E_ADC_8B = 2.58           # [23] 3.1mW @ 1.2GS/s -> pJ/convert at 8b
+ADC_SCALE_PER_BIT = 2.0   # [65]: energy/area scale ~2x per bit
+E_DAC_PULSE = 0.1534       # pulse-train driver, per 1ns pulse per row
+E_DAC_STATIC = 0.0766      # flip-flop + AND gate per row-cycle
+E_CELL_MAX = 0.0492        # ReRAM cell at full input/full conductance, per pulse
+E_SRAM_BYTE = 0.3045        # input/psum buffer access per byte
+E_EDRAM_BYTE = 7.109        # tile eDRAM per byte
+E_ROUTER_BYTE = 12.275      # on-chip network per byte hop
+E_DIGITAL_MAC = 1.989      # digital add/mul (center processing, requant)
+CYCLE_NS = 100.0          # crossbar pipeline cycle (ADC stage bound)
+
+AVG_INPUT_DENSITY = 0.22  # mean normalized input slice value (Fig. 8 skew)
+AVG_WEIGHT_DENSITY = {    # mean normalized |weight slice| value by encoding
+    "unsigned": 0.42,     # ISAAC dense high-order bits
+    "zero": 0.30,
+    "center": 0.17,       # Center+Offset sparse high-order bits (Fig. 8)
+}
+
+
+def adc_energy_per_convert(bits: int) -> float:
+    return E_ADC_8B * ADC_SCALE_PER_BIT ** (bits - 8)
+
+
+# ---------------------------------------------------------------- arch presets
+@dataclasses.dataclass(frozen=True)
+class PimArchConfig:
+    name: str
+    rows: int
+    cols: int
+    adc_bits: int
+    n_weight_slices: int          # typical (adaptive archs override per layer)
+    bits_per_weight_slice: float
+    input_slices: int             # cycles per input (no speculation)
+    spec_slices: int = 0          # speculative cycles (0 = no speculation)
+    spec_fail_rate: float = 0.02  # paper: ~2% of speculations fail
+    signed_crossbar: bool = False # 2T2R
+    encoding: str = "unsigned"    # "unsigned" | "zero" | "center"
+    tiles: int = 1024
+    crossbars_per_tile: int = 32  # 8 IMAs x 4 crossbars (RAELLA §5)
+    adaptive_slicing: bool = False
+    two_cycle_signed: bool = True # RAELLA: pos/neg inputs in separate cycles;
+                                  # ISAAC's encoding handles sign in one pass
+
+    @property
+    def total_crossbars(self) -> int:
+        return self.tiles * self.crossbars_per_tile
+
+    def cycles_per_psum_set(self, signed_inputs: bool) -> int:
+        c = (self.spec_slices + self.input_slices) if self.spec_slices \
+            else self.input_slices
+        return c * (2 if (signed_inputs and self.two_cycle_signed) else 1)
+
+    def converts_per_column_pass(self) -> float:
+        """ADC converts needed to process one column over all input cycles."""
+        if self.spec_slices:
+            # paper §4.3.2: 3 speculative converts + ~0.3 recovery converts
+            avg_recovery = self.spec_fail_rate * (8 / self.spec_slices)
+            return self.spec_slices + avg_recovery * self.spec_slices
+        return self.input_slices
+
+
+ISAAC_8B = PimArchConfig(
+    name="isaac-8b", rows=128, cols=128, adc_bits=8,
+    n_weight_slices=4, bits_per_weight_slice=2, input_slices=8,
+    signed_crossbar=False, encoding="unsigned", tiles=1024,
+    crossbars_per_tile=64,  # 8b-modified ISAAC: 8b ADCs cost more area per
+                            # crossbar than the original 16b pipeline's, so
+                            # fewer crossbars fit a tile (8 IMAs x 8 xbars)
+    two_cycle_signed=False)  # ISAAC's input encoding handles sign in one pass
+
+RAELLA = PimArchConfig(
+    name="raella", rows=512, cols=512, adc_bits=7,
+    n_weight_slices=3, bits_per_weight_slice=8 / 3, input_slices=8,
+    spec_slices=3, signed_crossbar=True, encoding="center", tiles=743,
+    adaptive_slicing=True)
+
+RAELLA_NO_SPEC = dataclasses.replace(RAELLA, name="raella-nospec", spec_slices=0)
+
+# ablation intermediates (Fig. 14)
+CENTER_OFFSET_ONLY = dataclasses.replace(
+    RAELLA, name="center-offset", n_weight_slices=4, bits_per_weight_slice=2,
+    spec_slices=0, adaptive_slicing=False)
+CENTER_ADAPTIVE = dataclasses.replace(
+    RAELLA, name="center-adaptive", spec_slices=0)
+
+# FORMS-8: polarized fine-grained pruned ISAAC-like; prune ratio from paper
+FORMS_8 = dataclasses.replace(
+    ISAAC_8B, name="forms-8", adc_bits=5, rows=128,
+    n_weight_slices=8, bits_per_weight_slice=1)
+FORMS_PRUNE_RATIO = 2.0  # paper §2.6: 2.0x MACs/DNN reduction on ResNet18
+
+# TIMELY (65nm, analog-local-buffers; paper Fig. 13) — modeled at the
+# converts/MAC level only, with its reported 10x efficiency vs ISAAC class.
+TIMELY_REL_EFFICIENCY = 10.0
+
+
+# ---------------------------------------------------------------- energy model
+@dataclasses.dataclass
+class LayerReport:
+    layer: mp.LayerShape
+    mapping: mp.LayerMapping
+    converts: float
+    converts_per_mac: float
+    e_adc: float
+    e_dac: float
+    e_xbar: float
+    e_buffer: float
+    e_network: float
+    e_digital: float
+    latency_ns: float
+
+    @property
+    def energy(self) -> float:
+        return (self.e_adc + self.e_dac + self.e_xbar + self.e_buffer
+                + self.e_network + self.e_digital)
+
+
+@dataclasses.dataclass
+class DnnReport:
+    arch: str
+    layers: list[LayerReport]
+
+    @property
+    def energy(self) -> float:
+        return sum(l.energy for l in self.layers)
+
+    @property
+    def macs(self) -> int:
+        return sum(l.layer.macs for l in self.layers)
+
+    @property
+    def converts_per_mac(self) -> float:
+        return sum(l.converts for l in self.layers) / max(self.macs, 1)
+
+    @property
+    def latency_ns(self) -> float:
+        """Pipelined: bottleneck layer bounds steady-state throughput."""
+        return max(l.latency_ns / l.mapping.replication for l in self.layers)
+
+    @property
+    def energy_breakdown(self) -> dict:
+        keys = ["e_adc", "e_dac", "e_xbar", "e_buffer", "e_network", "e_digital"]
+        return {k: sum(getattr(l, k) for l in self.layers) for k in keys}
+
+
+def _layer_weight_slices(arch: PimArchConfig, layer: mp.LayerShape) -> float:
+    """Adaptive slicing outcome (Fig. 7): most layers 3 slices (4b-2b-2b),
+    last layer 8x1b, tiny/depthwise layers conservative 4."""
+    if not arch.adaptive_slicing:
+        return arch.n_weight_slices
+    if layer.last_layer:
+        return 8.0
+    if layer.depthwise or layer.filter_len < 64:
+        return 4.0
+    return 3.0
+
+
+def analyze_layer(arch: PimArchConfig, layer: mp.LayerShape) -> LayerReport:
+    n_w = _layer_weight_slices(arch, layer)
+    m = mp.map_layer(layer, arch.rows, arch.cols, int(n_w))
+    signed = layer.signed_inputs
+    cycles = arch.cycles_per_psum_set(signed)
+    sign_passes = 2 if (signed and arch.two_cycle_signed) else 1
+
+    # one "pass" = all crossbars of one layer copy process one input vector
+    # (toeplitz output positions). The filter dim is parallel hardware.
+    passes = math.ceil(layer.n_positions / m.toeplitz_positions)
+    total_cols = m.n_segments * layer.n_filters * n_w
+    col_passes = passes * total_cols
+
+    converts = col_passes * arch.converts_per_column_pass() * sign_passes
+    e_adc = converts * adc_energy_per_convert(arch.adc_bits)
+
+    # DAC drives every occupied row of every crossbar, every cycle
+    rows_driven = min(layer.filter_len, arch.rows * m.n_segments) \
+        * math.ceil(layer.n_filters / m.filters_per_xbar)
+    if layer.depthwise:
+        rows_driven = m.rows_used * math.ceil(layer.n_filters / m.filters_per_xbar)
+    row_cycles = passes * rows_driven * cycles
+    avg_pulses = AVG_INPUT_DENSITY * 15.0  # 4b pulse-train, data-dependent
+    e_dac = row_cycles * (E_DAC_STATIC + E_DAC_PULSE * avg_pulses)
+
+    # ReRAM crossbar: every occupied cell integrates input pulses
+    wdens = AVG_WEIGHT_DENSITY[arch.encoding]
+    # (toeplitz copies multiply occupied cells but divide passes: net equal)
+    cells = passes * cycles * layer.filter_len * layer.n_filters * n_w \
+        * m.toeplitz_positions
+    e_xbar = cells * E_CELL_MAX * AVG_INPUT_DENSITY * wdens
+    if arch.spec_slices:  # recovery cycles re-run the crossbar (paper §4.3)
+        e_xbar *= 1.25    # recovery cheaper: small 1b inputs
+
+    # buffers: input-slice reads per row-cycle; every ADC convert triggers a
+    # shift+add into a 16b psum-buffer entry; outputs requantized to 8b
+    out_bytes = layer.n_positions * layer.n_filters
+    e_buffer = row_cycles * (2 if arch.spec_slices else 1) * 0.125 * E_SRAM_BYTE \
+        + converts * 2 * E_SRAM_BYTE
+    # network/eDRAM: inputs travel the H-tree to every crossbar of the copy
+    # (span grows with crossbar count), outputs return once
+    span = math.sqrt(max(m.n_crossbars, 1))
+    in_elems = layer.n_positions * layer.filter_len / max(m.toeplitz_positions, 1)
+    e_network = in_elems * (E_EDRAM_BYTE + E_ROUTER_BYTE * 0.1 * span) \
+        + out_bytes * (E_EDRAM_BYTE + E_ROUTER_BYTE)
+
+    # digital: shift+add per convert, requant per output, center processing
+    # (one add per input element + one mul/sub per filter-segment-pass)
+    e_digital = converts * E_DIGITAL_MAC * 0.1 + out_bytes * E_DIGITAL_MAC * 2
+    if arch.encoding == "center":
+        e_digital += (passes * rows_driven * 0.02
+                      + passes * m.n_segments * layer.n_filters) * E_DIGITAL_MAC
+
+    # only output positions serialize (filters/segments are parallel xbars)
+    latency = passes * cycles * CYCLE_NS
+    cpm = converts / max(layer.macs, 1)
+    return LayerReport(layer=layer, mapping=m, converts=converts,
+                       converts_per_mac=cpm, e_adc=e_adc, e_dac=e_dac,
+                       e_xbar=e_xbar, e_buffer=e_buffer, e_network=e_network,
+                       e_digital=e_digital, latency_ns=latency)
+
+
+def analyze_dnn(arch: PimArchConfig, layers: Sequence[mp.LayerShape],
+                replicate: bool = True) -> DnnReport:
+    reports = [analyze_layer(arch, l) for l in layers]
+    if replicate:
+        mapped = [r.mapping for r in reports]
+        lat = [r.latency_ns for r in reports]
+        new_maps = mp.greedy_replicate(mapped, lat, arch.total_crossbars)
+        for r, nm in zip(reports, new_maps):
+            r.mapping = nm
+    return DnnReport(arch=arch.name, layers=reports)
+
+
+def titanium_law(energy_per_convert: float, converts_per_mac: float,
+                 macs: float, utilization: float) -> float:
+    """The Titanium Law, verbatim (Table 2)."""
+    return energy_per_convert * converts_per_mac * macs * (1.0 / utilization)

@@ -1,0 +1,108 @@
+"""Dynamic Input Slicing: speculation + recovery (paper §4.3).
+
+Speculation processes inputs with an aggressive slicing (default 4b-2b-2b:
+three cycles, three ADC converts per column). Any conversion that saturates
+at the ADC bounds is flagged; the failed (column x input-slice) results are
+*replaced* by a conservative recovery pass that re-slices that input slice
+into 1b sub-slices. The crossbar always runs all recovery cycles (11 cycles
+total for 3+8), but ADCs only convert — i.e. only *count work* — for columns
+that failed speculation. If recovery itself saturates (rare) the saturated
+value is accepted and propagated (paper §3.4).
+
+The functional result is bit-exact with hardware; ADC-convert counts are the
+quantity the Titanium Law energy model consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import crossbar as xbar
+from repro.core import slicing as sl
+
+SPEC_SLICING = (4, 2, 2)  # paper: three speculative slices of 2-4 bits
+RECOVERY_BITS = 1         # paper: eight 1b recovery slices
+
+
+@dataclasses.dataclass
+class SpeculationStats:
+    adc_converts: jnp.ndarray          # converts actually performed (spec + recovery)
+    no_spec_converts: jnp.ndarray      # converts a recovery-only design would need
+    spec_failures: jnp.ndarray         # failed (column x spec-slice) conversions
+    spec_attempts: jnp.ndarray
+    recovery_saturations: jnp.ndarray  # accepted fidelity losses
+    cycles: int                        # crossbar cycles consumed (3 spec + 8 rec = 11)
+    macs: int
+
+    @property
+    def failure_rate(self):
+        return self.spec_failures / jnp.maximum(self.spec_attempts, 1)
+
+
+def forward(x_u8: jnp.ndarray,
+            enc: co.EncodedWeights,
+            spec_slicing: Sequence[int] = SPEC_SLICING,
+            adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+            *,
+            noise_level: float = 0.0,
+            key: jax.Array | None = None) -> tuple[jnp.ndarray, SpeculationStats]:
+    """Speculative crossbar forward. x_u8: (B, rows) -> (psum (B, cols), stats)."""
+    B = x_u8.shape[0]
+    n_seg, R = enc.n_segments, enc.rows_per_xbar
+    xs = xbar._segment_inputs(x_u8, n_seg, R)
+    planes = jnp.asarray(enc.planes)
+    spec_bounds = sl.slice_bounds(spec_slicing, sl.INPUT_BITS)
+
+    psum = co.center_term(x_u8, enc)
+    converts = jnp.zeros((), jnp.int32)
+    failures = jnp.zeros((), jnp.int32)
+    attempts = jnp.zeros((), jnp.int32)
+    rec_sats = jnp.zeros((), jnp.int32)
+
+    n_keys = sum(1 + w for w in spec_slicing) * enc.n_slices
+    keys = (jax.random.split(key, n_keys) if key is not None else [None] * n_keys)
+    ki = 0
+    for (hi, li) in spec_bounds:
+        width = hi - li + 1
+        x_spec = sl.crop_unsigned(xs, hi, li)  # (B, n_seg, R)
+        for j in range(enc.n_slices):
+            lw = enc.shifts[j]
+            pos, neg = xbar.column_sums(x_spec, planes[j])
+            spec_val, spec_sat = adc_lib.convert(
+                pos - neg, adc, noise_level=noise_level,
+                pos_sum=pos, neg_sum=neg, key=keys[ki])
+            ki += 1
+            # --- recovery: re-process this input slice as `width` 1b slices.
+            rec_total = jnp.zeros_like(spec_val)
+            for b in range(width - 1, -1, -1):  # local bit positions
+                x_bit = sl.crop_unsigned(xs, li + b, li + b)
+                rpos, rneg = xbar.column_sums(x_bit, planes[j])
+                rval, rsat = adc_lib.convert(
+                    rpos - rneg, adc, noise_level=noise_level,
+                    pos_sum=rpos, neg_sum=rneg, key=keys[ki])
+                ki += 1
+                rec_total = rec_total + (rval << b)
+                rec_sats = rec_sats + (rsat & spec_sat).sum()
+            value = jnp.where(spec_sat, rec_total, spec_val)
+            psum = psum + (value.sum(axis=1) << (li + lw))
+            # work accounting (per paper: recovery ADCs power-gated on success)
+            n_cols = B * n_seg * enc.cols
+            attempts = attempts + n_cols
+            failures = failures + spec_sat.sum()
+            converts = converts + n_cols + width * spec_sat.sum()
+    stats = SpeculationStats(
+        adc_converts=converts,
+        no_spec_converts=jnp.asarray(
+            B * n_seg * enc.cols * sl.INPUT_BITS * enc.n_slices, jnp.int32),
+        spec_failures=failures,
+        spec_attempts=attempts,
+        recovery_saturations=rec_sats,
+        cycles=len(spec_slicing) + sl.INPUT_BITS,
+        macs=B * enc.rows * enc.cols)
+    return psum, stats

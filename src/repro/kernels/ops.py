@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Every op takes ``use_pallas``: True runs the Pallas kernel (interpret mode on
+CPU — bit-identical semantics, real TPU lowering on device), False runs the
+pure-XLA fallback from ``ref`` (what the 512-device dry-run lowers, since the
+host CPU backend does not lower Pallas TPU kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import int8_matmul as _im
+from repro.kernels import ref as _ref
+from repro.kernels import sliced_crossbar as _sx
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def centered_int8_matmul(x_q: jnp.ndarray, w_off: jnp.ndarray,
+                         centers: jnp.ndarray, *,
+                         use_pallas: bool = False) -> jnp.ndarray:
+    """y_int32 = x_q @ w_off + rowsum(x_q) * centers (Eq. 1 fast path)."""
+    if use_pallas:
+        return _im.centered_int8_matmul(x_q, w_off, centers,
+                                        interpret=not _on_tpu())
+    return _ref.centered_int8_matmul(x_q, w_off, centers)
+
+
+def sliced_crossbar_matmul(x_slices: jnp.ndarray, w_planes: jnp.ndarray,
+                           mults: jnp.ndarray, *,
+                           adc_lo: int = -64, adc_hi: int = 63,
+                           rows_per_xbar: int = 512,
+                           use_pallas: bool = False) -> jnp.ndarray:
+    """RAELLA crossbar contraction with per-segment ADC clamp."""
+    if use_pallas:
+        return _sx.sliced_crossbar_matmul(
+            x_slices, w_planes, mults, adc_lo=adc_lo, adc_hi=adc_hi,
+            rows_per_xbar=rows_per_xbar, interpret=not _on_tpu())
+    return _ref.sliced_crossbar_matmul(
+        x_slices, w_planes, mults, adc_lo=adc_lo, adc_hi=adc_hi,
+        rows_per_xbar=rows_per_xbar)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def centered_int8_matmul(x_q: jnp.ndarray, w_off: jnp.ndarray,
+                         centers: jnp.ndarray) -> jnp.ndarray:
+    """y = x_q @ w_off + rowsum(x_q) * centers   (all int32).
+
+    x_q: (B, K) int8; w_off: (K, N) int8; centers: (N,) int32.
+    The TPU-native form of the paper's Eq. 1: offsets on the MXU, the
+    rank-1 center term digital.
+    """
+    acc = jnp.dot(x_q.astype(jnp.int32), w_off.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    xsum = x_q.astype(jnp.int32).sum(axis=-1, keepdims=True)
+    return acc + xsum * centers[None, :].astype(jnp.int32)
+
+
+def sliced_crossbar_matmul(x_slices: jnp.ndarray, w_planes: jnp.ndarray,
+                           mults: jnp.ndarray, *,
+                           rows_per_xbar: int = 512,
+                           adc_lo: int = -64, adc_hi: int = 63) -> jnp.ndarray:
+    """Bit-exact RAELLA crossbar contraction (the PIM-simulation hot spot).
+
+    x_slices: (n_i, B, R) int8  — unsigned input-slice values (0..15).
+    w_planes: (n_j, R, C) int8  — signed weight-slice values (-15..15).
+    mults:    (n_i, n_j) int32  — 2**(l_i + l_j) recombination multipliers.
+    Per 512-row segment, each (i, j) column sum is clamped by the ADC before
+    the digital shift+add — the contraction is deliberately non-associative
+    across segments (each segment has its own ADC).
+
+    Returns (B, C) int32 psums of the offset term (no center term).
+    """
+    n_i, B, R = x_slices.shape
+    n_j, _, C = w_planes.shape
+    n_seg = -(-R // rows_per_xbar)
+    pad = n_seg * rows_per_xbar - R
+    x_p = jnp.pad(x_slices, ((0, 0), (0, 0), (0, pad)))
+    w_p = jnp.pad(w_planes, ((0, 0), (0, pad), (0, 0)))
+    xs = x_p.reshape(n_i, B, n_seg, rows_per_xbar)
+    ws = w_p.reshape(n_j, n_seg, rows_per_xbar, C)
+    out = jnp.zeros((B, C), jnp.int32)
+    for i in range(n_i):
+        for j in range(n_j):
+            cs = jnp.einsum("bsr,src->bsc", xs[i].astype(jnp.int32),
+                            ws[j].astype(jnp.int32),
+                            preferred_element_type=jnp.int32)
+            cs = jnp.clip(cs, adc_lo, adc_hi)  # per-segment ADC
+            out = out + cs.sum(axis=1) * mults[i, j]
+    return out

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: RAELLA sliced-crossbar contraction (PIM sim hot spot).
+
+The bit-exact accelerator simulation spends nearly all its time computing,
+for every (input-slice i, weight-slice j) pair and every 512-row crossbar
+segment s, the signed column sums
+
+    cs[i, j, s, b, c] = sum_r x_slices[i, b, 512*s + r] * w_planes[j, 512*s + r, c]
+
+then clamping each to the ADC range and shift+adding into int32 psums. The
+slice values are tiny integers, so every column-sum block is an int8 x int8
+MXU matmul; the ADC clamp + shift+add is a cheap VPU epilogue. This kernel
+fuses the whole contraction so column sums never round-trip to HBM.
+
+Hardware mapping notes (TPU adaptation of the PIM algorithm):
+  - the 512-row crossbar segment IS the K block: the ADC's non-associative
+    clamp forces K-blocking at exactly 512, which conveniently matches MXU-
+    friendly tiling (512 = 4 x 128).
+  - slice pairs (i, j) are additional grid axes that revisit the same output
+    block, accumulating in VMEM — slices never materialize separate outputs.
+
+Grid: (B/bm, C/bn, n_seg, n_i, n_j), output revisited across the last three.
+VMEM at defaults (bm=128, bn=256): x 128*512 + w 512*256 int8 = 192 KiB,
+acc 128*256 int32 = 128 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_XBAR = 512
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+
+
+def _kernel(x_ref, w_ref, mult_ref, o_ref, acc_ref, *,
+            n_seg: int, n_i: int, n_j: int, adc_lo: int, adc_hi: int):
+    s = pl.program_id(2)
+    i = pl.program_id(3)
+    j = pl.program_id(4)
+    first = (s == 0) & (i == 0) & (j == 0)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cs = jax.lax.dot(x_ref[0], w_ref[0],
+                     preferred_element_type=jnp.int32)  # (bm, bn)
+    cs = jnp.clip(cs, adc_lo, adc_hi)                   # the per-segment ADC
+    acc_ref[...] += cs * mult_ref[0, 0]
+
+    last = (s == n_seg - 1) & (i == n_i - 1) & (j == n_j - 1)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("adc_lo", "adc_hi", "bm", "bn",
+                                             "rows_per_xbar", "interpret"))
+def sliced_crossbar_matmul(x_slices: jnp.ndarray, w_planes: jnp.ndarray,
+                           mults: jnp.ndarray, *,
+                           adc_lo: int = -64, adc_hi: int = 63,
+                           bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                           rows_per_xbar: int = ROWS_PER_XBAR,
+                           interpret: bool = True) -> jnp.ndarray:
+    """x_slices (n_i, B, R) int8, w_planes (n_j, R, C) int8,
+    mults (n_i, n_j) int32 -> psums (B, C) int32.
+
+    Zero row padding is exact (zero sliced products clamp to zero).
+    """
+    n_i, B, R = x_slices.shape
+    n_j, R2, C = w_planes.shape
+    assert R == R2, (R, R2)
+    n_seg = -(-R // rows_per_xbar)
+    Rp = n_seg * rows_per_xbar
+    bm = min(bm, _rup(B, 8))
+    bn = min(bn, _rup(C, 128))
+    Bp, Cp = _rup(B, bm), _rup(C, bn)
+    x_p = jnp.pad(x_slices, ((0, 0), (0, Bp - B), (0, Rp - R)))
+    w_p = jnp.pad(w_planes, ((0, 0), (0, Rp - R), (0, Cp - C)))
+    grid = (Bp // bm, Cp // bn, n_seg, n_i, n_j)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_seg=n_seg, n_i=n_i, n_j=n_j,
+                          adc_lo=adc_lo, adc_hi=adc_hi),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, rows_per_xbar),
+                         lambda b, c, s, i, j: (i, b, s)),
+            pl.BlockSpec((1, rows_per_xbar, bn),
+                         lambda b, c, s, i, j: (j, s, c)),
+            pl.BlockSpec((1, 1), lambda b, c, s, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda b, c, s, i, j: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Cp), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_p, w_p, mults.astype(jnp.int32))
+    return out[:B, :C]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The CPU backend emulates bf16 via f32 converts; loop-invariant code motion
+# then hoists the convert of whole saved-residual stacks out of the backward
+# while-loop, materializing f32 copies of every layer at once. TPU has
+# native bf16 — suppress the artifact so per-device numbers are meaningful.
+os.environ["XLA_FLAGS"] += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell with the production shardings, and extract the roofline terms
+from the compiled artifact.
+
+No arrays are ever allocated: params/optimizer/caches are ShapeDtypeStructs
+(jax.eval_shape) and the jit is only lowered and compiled. A cell passing
+here proves the distribution config is coherent — shardings consistent,
+collectives legal, per-device memory within HBM.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun
+  python -m repro.launch.dryrun --arch jamba-1.5-large-398b --shape long_500k \
+      --single-pod-only
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ArchConfig, InputShape
+from repro.dist import sharding as dsh
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # TPU v5e
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            inputs = jax.ShapeDtypeStruct((B, S), tok)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        return {"inputs": inputs, "labels": jax.ShapeDtypeStruct((B, S), tok)}
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"inputs": jax.ShapeDtypeStruct((B, S), tok)}
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)}
+    # decode: one new token against a seq_len cache
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+
+
+def batch_logical(cfg: ArchConfig, shape: InputShape) -> dict:
+    if shape.kind == "train":
+        il = ("batch", "seq") if cfg.input_mode == "tokens" \
+            else ("batch", "seq", None)
+        return {"inputs": il, "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        il = ("batch", "seq") if cfg.input_mode == "tokens" \
+            else ("batch", "seq", None)
+        return {"inputs": il}
+    tl = ("batch", None) if cfg.input_mode == "tokens" \
+        else ("batch", None, None)
+    return {"tokens": tl}
+
+
+def _shardings(spec_tree, mesh, abstract_tree=None):
+    sh = jax.tree.map(
+        lambda ax: NamedSharding(mesh, dsh.spec_for(ax, mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple))
+    if abstract_tree is not None:
+        sh = dsh.sanitize_shardings(sh, abstract_tree)
+    return sh
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ------------------------------------------------------------- step builders
+from repro.train.train_loop import make_train_step  # noqa: E402  (shared with
+# the real launcher: the dry-run lowers exactly what training runs)
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["inputs"])
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, state, batch):
+        return T.decode_step(params, cfg, state, batch["tokens"])
+    return serve_step
+
+
+# ------------------------------------------------------------- cell dry-run
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                verbose: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = {s.name: s for s in configs.runnable_shapes(cfg)}.get(shape_name)
+    if shape is None:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "assignment skip rule (see DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "decode":
+        rules = dsh.MULTIPOD_SERVE_RULES if multi_pod else dsh.SERVE_RULES
+    else:
+        rules = dsh.MULTIPOD_RULES if multi_pod else dsh.DEFAULT_RULES
+    t0 = time.time()
+    with dsh.axis_rules(rules):
+        pspecs = T.param_specs(cfg)
+        params_abs = _abstract(lambda: T.init_params(cfg, jax.random.key(0))[0])
+        params_sh = _shardings(pspecs, mesh, params_abs)
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = _shardings(batch_logical(cfg, shape), mesh, batch_abs)
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            opt_cfg = opt.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+            opt_abs = _abstract(lambda: opt.init_state(opt_cfg, params_abs))
+            opt_sh = _shardings(opt.state_specs(pspecs), mesh, opt_abs)
+            step = make_train_step(cfg, opt_cfg)
+            metrics_sh = {"grad_norm": repl, "lr": repl, "loss": repl}
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, metrics_sh),
+                             donate_argnums=(0, 1))
+            args = (params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            logits_abs, cache_abs = _abstract(step, params_abs, batch_abs)
+            cache_sh = _shardings(T.cache_specs(cfg), mesh, cache_abs)
+            logits_sh = dsh.sanitize_shardings(
+                NamedSharding(mesh, dsh.spec_for(("batch", None, "vocab"),
+                                                 mesh)), logits_abs)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(logits_sh, cache_sh))
+            args = (params_abs, batch_abs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            state_abs = _abstract(
+                lambda: T.init_decode_state(cfg, shape.global_batch,
+                                            shape.seq_len))
+            cache_sh = _shardings(T.cache_specs(cfg), mesh, state_abs)
+            logits_abs, _ = _abstract(step, params_abs, state_abs, batch_abs)
+            logits_sh = dsh.sanitize_shardings(
+                NamedSharding(mesh, dsh.spec_for(("batch", None, "vocab"),
+                                                 mesh)), logits_abs)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(1,))
+            args = (params_abs, state_abs, batch_abs)
+
+        with mesh:  # in-model logical sharding constraints bind to this mesh
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    # loop-aware analysis: XLA's cost_analysis visits while bodies once,
+    # under-counting scanned layers by the trip count — parse the HLO and
+    # scale loop bodies ourselves (repro.launch.hlo_analysis).
+    costs = hlo.analyze(compiled.as_text())
+    flops = costs.flops
+    bytes_acc = costs.hbm_bytes
+    terms = hlo.roofline_terms(flops, bytes_acc, costs.total_coll_bytes)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    dev_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    # embedding lookups are gathers, not MACs: exclude the table from the
+    # useful-FLOPs numerator (the LM head IS a matmul and stays counted)
+    n_flops_params = n_active - cfg.vocab_size * cfg.d_model
+    model_flops = (6 if shape.kind == "train" else 2) * n_flops_params * tokens
+    model_flops_per_chip = model_flops / n_chips
+
+    report = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "n_chips": n_chips, "status": "ok",
+        "per_device_bytes": int(dev_bytes),
+        "per_device_gib": round(dev_bytes / 1024 ** 3, 3),
+        "fits_hbm": bool(dev_bytes <= HBM_PER_CHIP),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": costs.total_coll_bytes,
+        "collective_breakdown": costs.coll_bytes,
+        "collective_counts": costs.coll_counts,
+        "xla_cost_analysis_flops_loop_once": float(ca.get("flops", 0.0)),
+        "model_flops_per_device": model_flops_per_chip,
+        "useful_flops_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+        "compile_seconds": round(time.time() - t0, 1),
+        **terms,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x "
+              f"{'2x16x16' if multi_pod else '16x16'}] "
+              f"{report['per_device_gib']} GiB/dev "
+              f"fits={report['fits_hbm']} "
+              f"compute={terms['compute_s']:.3e}s "
+              f"mem={terms['memory_s']:.3e}s "
+              f"coll={terms['collective_s']:.3e}s "
+              f"bound={terms['bottleneck']} "
+              f"({report['compile_seconds']}s compile)")
+        print("  memory_analysis:", ma)
+        cak = {k: ca[k] for k in ("flops", "bytes accessed") if k in ca}
+        print("  cost_analysis:", cak)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON reports")
+    args = ap.parse_args()
+
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    cells = []
+    archs = configs.ASSIGNED if (args.all or not args.arch) else (args.arch,)
+    for a in archs:
+        cfg = configs.get(a)
+        shapes = [s.name for s in configs.runnable_shapes(cfg)]
+        if args.shape:
+            shapes = [args.shape] if args.shape in shapes else []
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    results, failures = [], 0
+    for a, s, mp in cells:
+        try:
+            r = dryrun_cell(a, s, multi_pod=mp)
+        except Exception as e:  # a failing cell is a bug in the system
+            traceback.print_exc()
+            r = {"arch": a, "shape": s, "multi_pod": mp, "status": "FAILED",
+                 "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results.append(r)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            tag = f"{a}_{s}_{'mp' if mp else 'sp'}.json"
+            with open(os.path.join(args.out, tag), "w") as f:
+                json.dump(r, f, indent=2)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\ndry-run: {ok} ok / {failures} failed / "
+          f"{len(results) - ok - failures} skipped, {len(results)} cells")
+    if args.out:
+        with open(os.path.join(args.out, "summary.json"), "w") as f:
+            json.dump(results, f, indent=2)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

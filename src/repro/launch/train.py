@@ -1,0 +1,69 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 100 \
+      --reduced --ckpt-dir /tmp/ckpt
+
+``--reduced`` runs the smoke-scale config (CPU-friendly); without it the
+full config is built (requires a real TPU slice — on this container use the
+dry-run instead). Fault tolerance: --resilient wraps the loop with
+checkpoint/restart + straggler monitoring.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import SyntheticLM
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt
+from repro.train import train_loop as tl
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resilient", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt_cfg = opt.AdamWConfig(lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps,
+                              state_dtype=cfg.opt_state_dtype)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=0)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, loss floor ~{data.entropy_floor():.3f}")
+    if args.resilient:
+        if not args.ckpt_dir:
+            raise SystemExit("--resilient requires --ckpt-dir")
+        state = ft.resilient_train(
+            cfg, opt_cfg, lambda s: data.iterator(s),
+            num_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every)
+    else:
+        hooks = [ft.StragglerMonitor().hook()]
+        if args.ckpt_dir:
+            from repro.train import checkpoint as ckpt
+            saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+            hooks.append(lambda st, m, dt: (
+                saver.save(st.step, (st.params, st.opt_state))
+                if st.step % args.ckpt_every == 0 else None))
+        state = tl.train(cfg, opt_cfg, data.iterator(0),
+                         num_steps=args.steps, hooks=hooks)
+    print(f"done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.models import layers, ssm, transformer  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    lm_loss,
+    param_specs,
+    prefill,
+)

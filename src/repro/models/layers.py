@@ -1,0 +1,351 @@
+"""Transformer building blocks, pure JAX.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with tuples of *logical* sharding axes (resolved by
+``repro.dist.sharding``). Attention is chunked (online softmax over KV
+blocks) so no S x S score tensor ever materializes — required for the 32k
+prefill shapes — plus a single-query flash-decode path that keeps the KV
+cache's sequence sharding intact. MoE uses GShard-style sub-grouped one-hot
+einsum dispatch (no scatter/gather: GSPMD partitions everything) with
+experts sharded over the model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist import shard
+
+ATTN_CHUNK = 512
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+# ------------------------------------------------------------------ norms
+def init_rmsnorm(d: int, dtype) -> tuple[dict, dict]:
+    return ({"scale": jnp.ones((d,), dtype)}, {"scale": (None,)})
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # variance accumulated in f32 via the dot unit; the apply stays in the
+    # input dtype. (A bare astype(f32) of the block input gets hoisted out
+    # of the XLA while-loop, materializing an f32 copy of every saved
+    # residual layer at once.)
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * params["scale"]
+
+
+# ------------------------------------------------------------------ rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def init_attention(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    """QKV/O projections stored 2D with the (heads x head_dim) axis merged:
+    the merged axis is always divisible by the model-axis size (40 heads x
+    128 = 5120 splits 16 ways even though 40 heads do not)."""
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dt) * sc,
+        "wk": jax.random.normal(ks[1], (d, k * hd), dt) * sc,
+        "wv": jax.random.normal(ks[2], (d, k * hd), dt) * sc,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dt) * (h * hd) ** -0.5,
+    }
+    s = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((k * hd,), dt)
+        p["bv"] = jnp.zeros((k * hd,), dt)
+        s["bq"] = ("heads",)
+        s["bk"] = ("kv_heads",)
+        s["bv"] = ("kv_heads",)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return p, s
+
+
+def qkv_project(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray):
+    """x (B, S, D) -> q (B,S,H,hd), k/v (B,S,K,hd), RoPE applied."""
+    B, S, _ = x.shape
+    nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, nh, hd)
+    k = k.reshape(B, S, nk, hd)
+    v = v.reshape(B, S, nk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      q_positions: jnp.ndarray,
+                      kv_len: jnp.ndarray | int,
+                      causal: bool,
+                      chunk: int = ATTN_CHUNK) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks (flash-style, exact).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H = K * G.
+    q_positions: (B, Sq) global positions of the queries (causal masking).
+    kv_len: number of valid KV entries (int or (B,) — masks cache padding).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    if Sq == 1:
+        # decode fast path: one query — no chunk scan. Keeps the KV cache's
+        # sequence sharding intact (a scan would slice the sharded seq dim
+        # per step, forcing GSPMD to all-gather the whole cache every
+        # chunk); the softmax over the sharded seq dim lowers to partial
+        # max/sum + a tiny (B,H) all-reduce — flash-decode semantics.
+        kv_len_ = jnp.asarray(kv_len, jnp.int32)
+        if kv_len_.ndim == 0:
+            kv_len_ = jnp.broadcast_to(kv_len_[None], (B,))
+        qg1 = q.reshape(B, K, G, D).astype(jnp.float32)
+        s = jnp.einsum("bkgd,bckd->bkgc", qg1,
+                       k.astype(jnp.float32)) * (D ** -0.5)
+        kpos = jnp.arange(Sk)
+        mask = kpos[None, :] < kv_len_[:, None]          # (B, Sk)
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+        return out.reshape(B, 1, H, D).astype(q.dtype)
+    nk = -(-Sk // chunk)
+    pad = nk * chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(kp.reshape(B, nk, chunk, K, D), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(B, nk, chunk, K, D), 1, 0)
+    qg = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    scale = D ** -0.5
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = jnp.broadcast_to(kv_len[None], (B,))
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32)) * scale
+        kpos = ci * chunk + jnp.arange(chunk)  # (chunk,)
+        valid = kpos[None, :] < kv_len[:, None]  # (B, chunk)
+        mask = valid[:, None, None, None, :]
+        if causal:
+            cm = kpos[None, None, :] <= q_positions[:, :, None]  # (B, Sq, chunk)
+            mask = mask & cm[:, :, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, K, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    # flash-style backward: recompute scores/probs per chunk instead of
+    # saving (B, Sq, K, G, chunk) residuals for every chunk step
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_block(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_project(params, cfg, x, positions)
+    q = shard(q, "batch", "seq", None, None)
+    out = chunked_attention(q, k, v, q_positions=positions, kv_len=S,
+                            causal=cfg.causal)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), params["wo"])
+
+
+# ------------------------------------------------------------------ mlp
+def init_mlp(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": jax.random.normal(ks[0], (d, f), dt) * d ** -0.5,   # gate
+        "w3": jax.random.normal(ks[1], (d, f), dt) * d ** -0.5,   # up
+        "w2": jax.random.normal(ks[2], (f, d), dt) * f ** -0.5,   # down
+    }
+    s = {"w1": ("fsdp", "tp"), "w3": ("fsdp", "tp"), "w2": ("tp", "fsdp")}
+    return p, s
+
+
+def mlp_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    a = act_fn(cfg.activation)
+    h = a(jnp.einsum("bsd,df->bsf", x, params["w1"])) \
+        * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    h = shard(h, "batch", "seq", "tp")
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"])
+
+
+# ------------------------------------------------------------------ moe
+def init_moe(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "w1": jax.random.normal(ks[1], (e, d, f), dt) * d ** -0.5,
+        "w3": jax.random.normal(ks[2], (e, d, f), dt) * d ** -0.5,
+        "w2": jax.random.normal(ks[3], (e, f, d), dt) * f ** -0.5,
+    }
+    s = {"router": (None, None),
+         "w1": ("experts", "fsdp", "tp"),
+         "w3": ("experts", "fsdp", "tp"),
+         "w2": ("experts", "tp", "fsdp")}
+    return p, s
+
+
+def _moe_group_size(E: int) -> int:
+    """Dispatch-group length (slots): large enough that per-group expert
+    capacity is not over-quantized, small enough that the one-hot dispatch
+    tensor stays a few percent of expert compute."""
+    return 1024 if E >= 64 else 512
+
+
+def moe_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Top-k capacity-based MoE, EP over 'experts' (GShard-style).
+
+    Dispatch and combine are *one-hot einsums over sub-groups of slots* —
+    no scatter/gather anywhere, so GSPMD partitions everything (batch x
+    seq-groups x experts) and the only data movement is the all-to-all
+    class resharding around the expert einsums. The dispatch tensor is
+    (B, groups, g, E, cap_g): a few percent of expert FLOPs/bytes.
+    """
+    B, S, D = x.shape
+    if S == 1 and B > 1:
+        # decode: merge the batch into one dispatch group — per-token groups
+        # would give every token a private (E x cap) buffer, i.e. dense
+        # compute over all experts for one active row each (E-fold waste)
+        out = moe_block(params, cfg, x.reshape(1, B, D))
+        return out.reshape(B, 1, D)
+    E, k = cfg.n_experts, cfg.experts_per_token
+    a = act_fn(cfg.activation)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    vals, idx = jax.lax.top_k(logits, k)                # (B, S, k)
+    if k == 1:
+        weights = jax.nn.sigmoid(vals)                  # llama4-style gate
+    else:
+        weights = jax.nn.softmax(vals, axis=-1)
+
+    slots = S * k
+    g = min(_moe_group_size(E), slots)
+    nG = -(-slots // g)
+    pad = nG * g - slots
+    cap = max(k, int(math.ceil(cfg.capacity_factor * g / E)))
+
+    fe = idx.reshape(B, slots)
+    fw = weights.reshape(B, slots).astype(x.dtype)
+    xr = jnp.repeat(x, k, axis=1)                        # (B, slots, D)
+    if pad:
+        fe = jnp.pad(fe, ((0, 0), (0, pad)), constant_values=E)  # E = none
+        fw = jnp.pad(fw, ((0, 0), (0, pad)))
+        xr = jnp.pad(xr, ((0, 0), (0, pad), (0, 0)))
+    fe = fe.reshape(B, nG, g)
+    fw = fw.reshape(B, nG, g)
+    xg = xr.reshape(B, nG, g, D)
+    xg = shard(xg, "batch", "seq", None, None)
+
+    # ranks in f32: group length can exceed bf16's exact-integer range
+    eh32 = jax.nn.one_hot(fe, E, dtype=jnp.float32)      # (B, nG, g, E)
+    ranks = jnp.cumsum(eh32, axis=2) - eh32              # rank within expert
+    pos = jnp.einsum("bnge,bnge->bng", ranks, eh32).astype(jnp.int32)
+    eh = eh32.astype(x.dtype)
+    keep = (pos < cap).astype(x.dtype)
+    ph = jax.nn.one_hot(pos, cap, dtype=x.dtype)         # (B, nG, g, cap)
+    dispatch = eh[..., :, None] * ph[..., None, :] \
+        * keep[..., None, None]                          # (B, nG, g, E, cap)
+    dispatch = shard(dispatch, "batch", None, None, "experts", None)
+
+    buf = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)  # (B, nG, E, cap, D)
+    buf = shard(buf, "batch", None, "experts", None, None)
+    h = a(jnp.einsum("bnecd,edf->bnecf", buf, params["w1"])) \
+        * jnp.einsum("bnecd,edf->bnecf", buf, params["w3"])
+    h = shard(h, "batch", None, "experts", None, "tp")
+    y = jnp.einsum("bnecf,efd->bnecd", h, params["w2"])
+    y = shard(y, "batch", None, "experts", None, None)
+
+    combine = dispatch * fw[..., None, None]
+    out = jnp.einsum("bngec,bnecd->bngd", combine, y)    # (B, nG, g, D)
+    out = out.reshape(B, nG * g, D)[:, :slots]
+    return out.reshape(B, S, k, D).sum(axis=2)
+
+
+# ------------------------------------------------------------------ embedding
+def init_embedding(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["embed"] = jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), dt) \
+        * cfg.d_model ** -0.5
+    s["embed"] = ("vocab", "fsdp")
+    p["head"] = jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size), dt) \
+        * cfg.d_model ** -0.5
+    s["head"] = ("fsdp", "vocab")
+    return p, s
+
+
+def embed(params: dict, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["embed"][tokens]
+
+
+def lm_head(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return shard(logits, "batch", "seq", "vocab")

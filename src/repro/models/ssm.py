@@ -1,0 +1,321 @@
+"""State-space / linear-attention blocks: Mamba (Jamba) and RWKV6 (Finch).
+
+Both use O(1)-state recurrences lowered as *chunked* lax.scan: the outer scan
+carries only chunk-boundary states (rematerialized inner steps), which keeps
+train-time activation memory linear in n_chunks instead of seq_len — the
+reason these architectures run the long_500k shape at all.
+
+Decode is a single-step state update (the whole point of the family).
+
+RWKV6 follows the Finch formulation: per-head matrix state
+S_t = diag(w_t) S_{t-1} + k_t^T v_t with *data-dependent* decay w_t produced
+by a low-rank MLP on the token-shifted input (the paper's ddlerp is
+simplified to a single learned lerp + LoRA decay; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import shard
+
+SCAN_CHUNK = 128
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _chunked_scan(step_fn, h0, xs, chunk: int, remat: bool):
+    """scan(step_fn, h0, xs) over time axis 0, chunked with remat.
+
+    Sequence-pad steps are masked to identity on the carry so the final
+    state is exactly the state after the last *real* step.
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    xs_p = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), xs)
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs_p)
+    valid = (jnp.arange(n * chunk) < T).reshape(n, chunk)
+
+    def masked_step(h, xv):
+        x_t, v = xv
+        h2, y = step_fn(h, x_t)
+        h2 = jax.tree.map(lambda a, b: jnp.where(v, a, b), h2, h)
+        return h2, y
+
+    def chunk_body(h, xc):
+        return jax.lax.scan(masked_step, h, xc)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    h, ys = jax.lax.scan(chunk_body, h0, (xs_c, valid))
+    ys = jax.tree.map(
+        lambda a: a.reshape((n * chunk,) + a.shape[2:])[:T], ys)
+    return h, ys
+
+
+# ===================================================================== mamba
+def mamba_dims(cfg: ArchConfig):
+    di = cfg.mamba_expand * cfg.d_model
+    dtr = max(1, math.ceil(cfg.d_model / 16))
+    return di, dtr, cfg.mamba_d_state, cfg.mamba_conv
+
+
+def init_mamba(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    d = cfg.d_model
+    di, dtr, ds, conv = mamba_dims(cfg)
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dt) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (conv, di), dt) * conv ** -0.5,
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * ds), dt) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dt) * dtr ** -0.5,
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)) * 1.0),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), dt) * di ** -0.5,
+    }
+    s = {
+        "in_proj": ("fsdp", "tp"), "conv_w": (None, "tp"), "conv_b": ("tp",),
+        "x_proj": ("tp", None), "dt_proj": (None, "tp"), "dt_bias": ("tp",),
+        "A_log": ("tp", None), "D": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+    return p, s
+
+
+def _mamba_step(params, cfg, h, xt, bt, ct, dtt):
+    """One recurrence step. h (B, di, ds); xt/dtt (B, di); bt/ct (B, ds)."""
+    A = -jnp.exp(params["A_log"])                      # (di, ds)
+    dA = jnp.exp(dtt[..., None] * A[None])             # (B, di, ds)
+    h = dA * h + (dtt * xt)[..., None] * bt[:, None, :]
+    h = shard(h, "batch", "tp", None)  # carry stays sharded across the scan
+    y = jnp.einsum("bds,bs->bd", h, ct) \
+        + params["D"][None, :] * xt
+    return h, shard(y, "batch", "tp")
+
+
+def _mamba_preprocess(params, cfg, x, conv_state=None):
+    """Shared projections. x (B, S, d) -> (xin, z, dt, B, C) all (B, S, ...)."""
+    di, dtr, ds, conv = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # TP over d_inner: the selective-scan recurrence is elementwise in di,
+    # so this layout keeps the whole recurrence device-local. (Seq cannot
+    # stay sharded — it is the sequential scan axis.)
+    xin = shard(xin, "batch", None, "tp")
+    z = shard(z, "batch", None, "tp")
+    # causal depthwise conv (kernel `conv`) as shifted adds
+    if conv_state is None:
+        hist = jnp.concatenate(
+            [jnp.zeros_like(xin[:, :conv - 1]), xin], axis=1)
+    else:
+        hist = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)
+    xc = sum(params["conv_w"][i][None, None, :]
+             * jax.lax.dynamic_slice_in_dim(hist, i, xin.shape[1], axis=1)
+             for i in range(conv))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    new_conv_state = hist[:, -(conv - 1):] if conv > 1 else hist[:, :0]
+    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_proj"])
+    dt_lr, bmat, cmat = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt_full = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_lr, params["dt_proj"])
+        + params["dt_bias"]).astype(jnp.float32)
+    return (xc.astype(jnp.float32), z, dt_full,
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            new_conv_state)
+
+
+def mamba_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    di, dtr, ds, conv = mamba_dims(cfg)
+    xc, z, dt_full, bmat, cmat, _ = _mamba_preprocess(params, cfg, x)
+
+    def step(h, xs_t):
+        xt, bt, ct, dtt = xs_t
+        return _mamba_step(params, cfg, h, xt, bt, ct, dtt)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(dt_full, 1, 0))
+    _, ys = _chunked_scan(step, h0, xs, SCAN_CHUNK, cfg.remat)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)         # (B, S, di)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> dict:
+    di, dtr, ds, conv = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, di), _dt(cfg)),
+    }
+
+
+def mamba_decode_step(params: dict, cfg: ArchConfig, state: dict,
+                      x: jnp.ndarray) -> tuple[dict, jnp.ndarray]:
+    """x: (B, 1, d) -> (new_state, y (B, 1, d))."""
+    xc, z, dt_full, bmat, cmat, new_conv = _mamba_preprocess(
+        params, cfg, x, conv_state=state["conv"])
+    h, y = _mamba_step(params, cfg, state["h"], xc[:, 0], bmat[:, 0],
+                       cmat[:, 0], dt_full[:, 0])
+    y = (y[:, None, :]).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return {"h": h, "conv": new_conv}, out
+
+
+# ===================================================================== rwkv6
+def rwkv_dims(cfg: ArchConfig):
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    p = {
+        # token-shift lerp coefficients for r/k/v/g/w
+        "mix": jax.random.uniform(ks[0], (5, d), dt, 0.0, 1.0),
+        "wr": jax.random.normal(ks[1], (d, d), dt) * d ** -0.5,
+        "wk": jax.random.normal(ks[2], (d, d), dt) * d ** -0.5,
+        "wv": jax.random.normal(ks[3], (d, d), dt) * d ** -0.5,
+        "wg": jax.random.normal(ks[4], (d, d), dt) * d ** -0.5,
+        "wo": jax.random.normal(ks[5], (d, d), dt) * d ** -0.5,
+        # data-dependent decay LoRA (Finch)
+        "decay_base": jnp.full((d,), -1.0, jnp.float32),
+        "decay_A": jax.random.normal(ks[6], (d, lora), dt) * d ** -0.5,
+        "decay_B": jax.random.normal(ks[7], (lora, d), dt) * lora ** -0.5,
+        "bonus": jnp.zeros((H, hd), jnp.float32),      # u
+        "ln_x": jnp.ones((d,), dt),                    # post-wkv group norm
+    }
+    s = {
+        "mix": (None, None),
+        "wr": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+        "wg": ("fsdp", "tp"), "wo": ("tp", "fsdp"),
+        "decay_base": (None,), "decay_A": (None, None), "decay_B": (None, None),
+        "bonus": ("heads", None), "ln_x": (None,),
+    }
+    return p, s
+
+
+def _rwkv_project(params, cfg, x, x_prev):
+    """Token-shift + projections. x (B,S,d); x_prev (B,S,d) = shift(x)."""
+    H, hd = rwkv_dims(cfg)
+    B, S, d = x.shape
+    mixed = [x + (x_prev - x) * params["mix"][i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", mixed[0], params["wr"])
+    k = jnp.einsum("bsd,de->bse", mixed[1], params["wk"])
+    v = jnp.einsum("bsd,de->bse", mixed[2], params["wv"])
+    g = jnp.einsum("bsd,de->bse", mixed[3], params["wg"])
+    dec = params["decay_base"] + jnp.einsum(
+        "bsd,dl,le->bse", mixed[4], params["decay_A"], params["decay_B"])
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))     # (B, S, d) in (0,1)
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = shard(v.reshape(B, S, H, hd).astype(jnp.float32),
+               "batch", None, None, "tp")
+    wh = w.reshape(B, S, H, hd)
+    return rh, kh, vh, wh, g
+
+
+def _rwkv_step(params, h, rt, kt, vt, wt):
+    """h (B,H,hd,hd); rt/kt/vt/wt (B,H,hd) -> (h', y (B,H,hd))."""
+    u = params["bonus"][None]                          # (1,H,hd)
+    kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", rt, h + u[..., None] * kv)
+    h = wt[..., None] * h + kv
+    # state S[i, j]: decay acts on i (key channels), output contracts i.
+    # Sharding j (value channels) keeps the recurrence fully local.
+    h = shard(h, "batch", None, None, "tp")
+    return h, shard(y, "batch", None, "tp")
+
+
+def rwkv_time_mix(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence RWKV6 time-mix. x: (B, S, d)."""
+    B, S, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    rh, kh, vh, wh, g = _rwkv_project(params, cfg, x, x_prev)
+
+    def step(h, xs_t):
+        rt, kt, vt, wt = xs_t
+        return _rwkv_step(params, h, rt, kt, vt, wt)
+
+    h0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+    _, ys = _chunked_scan(step, h0, xs, SCAN_CHUNK, cfg.remat)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    # group-norm-ish scale + silu(g) gate (Finch output path)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+                          + cfg.norm_eps)
+    y = y * params["ln_x"] * jax.nn.silu(g)
+    return jnp.einsum("bsd,de->bse", y, params["wo"])
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> dict:
+    H, hd = rwkv_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), _dt(cfg)),
+        "cm_prev": jnp.zeros((batch, cfg.d_model), _dt(cfg)),
+    }
+
+
+def rwkv_time_mix_decode(params: dict, cfg: ArchConfig, state: dict,
+                         x: jnp.ndarray) -> tuple[dict, jnp.ndarray]:
+    """x: (B, 1, d)."""
+    B, _, d = x.shape
+    x_prev = state["x_prev"][:, None, :]
+    rh, kh, vh, wh, g = _rwkv_project(params, cfg, x, x_prev)
+    h, y = _rwkv_step(params, state["h"], rh[:, 0], kh[:, 0], vh[:, 0],
+                      wh[:, 0])
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+                          + cfg.norm_eps)
+    y = y * params["ln_x"] * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    new_state = dict(state, h=h, x_prev=x[:, 0])
+    return new_state, out
+
+
+# rwkv channel-mix (plays the FFN role; relu^2 + receptance gate)
+def init_rwkv_channel_mix(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "mix": jax.random.uniform(ks[0], (2, d), dt, 0.0, 1.0),
+        "wk": jax.random.normal(ks[1], (d, f), dt) * d ** -0.5,
+        "wv": jax.random.normal(ks[2], (f, d), dt) * f ** -0.5,
+        "wr": jax.random.normal(ks[0], (d, d), dt) * d ** -0.5,
+    }
+    s = {"mix": (None, None), "wk": ("fsdp", "tp"), "wv": ("tp", "fsdp"),
+         "wr": ("fsdp", None)}
+    return p, s
+
+
+def rwkv_channel_mix(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+                     x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    if x_prev is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * params["mix"][0]
+    xr = x + (x_prev - x) * params["mix"][1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["wk"])))
+    k = shard(k, "batch", "seq", "tp")
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"])) * kv

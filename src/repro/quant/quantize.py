@@ -1,0 +1,142 @@
+"""8b per-channel linear quantization (paper §2.1, [82]-style).
+
+The paper's supported scheme: 8b inputs/weights, 16b psums, per-output-channel
+weight scales, outputs digitally requantized back to 8b with an FP16
+scale+bias (activation functions folded into requantization).
+
+Weight convention on-crossbar: unsigned 8b domain w_u = w_q + 128 (the +128
+folds into the digital center term — see core.center_offset). Inputs are
+unsigned 8b for ReLU-family activations; signed inputs are processed as two
+unsigned passes max(x,0) / max(-x,0) per the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    values: jnp.ndarray            # int8 / uint8-domain int32
+    scale: jnp.ndarray             # per-channel or scalar fp32
+    zero_point: jnp.ndarray        # same shape as scale, int32
+    signed: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """All quantization parameters of one linear layer y = x @ w + b."""
+    w_scale: jnp.ndarray           # (cols,) fp32 — per-output-channel
+    x_scale: jnp.ndarray           # scalar fp32
+    x_zero_point: jnp.ndarray      # scalar int32 (0 when inputs signed)
+    x_signed: bool
+    out_scale: jnp.ndarray         # scalar fp32 — 8b output requant scale
+    out_zero_point: jnp.ndarray    # scalar int32
+    bias: jnp.ndarray | None       # (cols,) fp32 or None
+
+
+def quantize_weights_per_channel(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """w (rows, cols) fp -> (w_q int8 symmetric per-col, scale (cols,))."""
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+def quantize_weights_centered(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Center+Offset quantization in the float domain (paper Eq. 1 on TPU).
+
+    Per output channel: center = midpoint of [min, max], scale = half-range /
+    127. Offsets are guaranteed int8. For channels with skewed weight
+    distributions this gives up to 2x finer resolution than symmetric int8 —
+    the TPU-native payoff of the paper's centering insight.
+
+    w (rows, cols) fp -> (w_off int8, centers int32 (cols,), scale (cols,)).
+    Reconstruction: w ~= scale * (w_off + centers).
+    """
+    w_min = jnp.min(w, axis=0)
+    w_max = jnp.max(w, axis=0)
+    mid = 0.5 * (w_max + w_min)
+    half = jnp.maximum(0.5 * (w_max - w_min), 1e-12)
+    scale = half / 127.0
+    centers = jnp.round(mid / scale).astype(jnp.int32)
+    w_off = jnp.clip(jnp.round(w / scale) - centers, -127, 127).astype(jnp.int8)
+    return w_off, centers, scale.astype(jnp.float32)
+
+
+def quantize_inputs_unsigned(x: jnp.ndarray, x_max: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """ReLU-family activations: x in [0, x_max] -> uint8 [0, 255]."""
+    scale = jnp.maximum(jnp.asarray(x_max, jnp.float32), 1e-12) / 255.0
+    x_q = jnp.clip(jnp.round(x / scale), 0, 255).astype(jnp.int32)
+    return x_q, scale
+
+
+def quantize_inputs_signed(x: jnp.ndarray, x_absmax: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Signed activations -> int8 [-127, 127] symmetric."""
+    scale = jnp.maximum(jnp.asarray(x_absmax, jnp.float32), 1e-12) / 127.0
+    x_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+    return x_q, scale
+
+
+def dequantize(y_int: jnp.ndarray, lq: LayerQuant,
+               x_q_sum: jnp.ndarray, w_col_sum: jnp.ndarray) -> jnp.ndarray:
+    """int32 accumulator (x_q @ w_q algebra) -> float psum.
+
+    y_int is x_q @ w_q where x_q may carry a zero point:
+      y = s_w * s_x * (y_int - zp_x * w_col_sum)
+    w_col_sum: (cols,) sum of int8 weights per column. x_q_sum kept for
+    symmetric-input case (unused; here for API symmetry with PIM path).
+    """
+    del x_q_sum
+    corrected = y_int.astype(jnp.float32) - lq.x_zero_point.astype(jnp.float32) * w_col_sum.astype(jnp.float32)
+    y = lq.w_scale[None, :] * lq.x_scale * corrected
+    if lq.bias is not None:
+        y = y + lq.bias[None, :]
+    return y
+
+
+def requantize_outputs(y: jnp.ndarray, lq: LayerQuant,
+                       relu: bool = False) -> jnp.ndarray:
+    """float psum -> 8b output codes (activation folded in, paper [82])."""
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    q = jnp.round(y / lq.out_scale) + lq.out_zero_point
+    lo, hi = (0, 255) if relu else (-128, 127)
+    return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+
+def calibrate_layer(w: jnp.ndarray, x_cal: jnp.ndarray, *,
+                    signed_inputs: bool | None = None,
+                    bias: jnp.ndarray | None = None,
+                    relu_out: bool = False) -> tuple[LayerQuant, jnp.ndarray]:
+    """Build LayerQuant from float weights + calibration activations.
+
+    Returns (LayerQuant, w_q int8). Output scale calibrated from the float
+    reference output range on the calibration batch.
+    """
+    w_q, w_scale = quantize_weights_per_channel(w)
+    if signed_inputs is None:
+        signed_inputs = bool(jnp.any(x_cal < 0))
+    if signed_inputs:
+        x_scale = jnp.max(jnp.abs(x_cal)) / 127.0
+        zp = jnp.asarray(0, jnp.int32)
+    else:
+        x_scale = jnp.max(x_cal) / 255.0
+        zp = jnp.asarray(0, jnp.int32)
+    x_scale = jnp.maximum(x_scale, 1e-12).astype(jnp.float32)
+    y_ref = x_cal @ w + (bias if bias is not None else 0.0)
+    if relu_out:
+        y_ref = jnp.maximum(y_ref, 0.0)
+        out_scale = jnp.maximum(jnp.max(y_ref), 1e-12) / 255.0
+    else:
+        out_scale = jnp.maximum(jnp.max(jnp.abs(y_ref)), 1e-12) / 127.0
+    lq = LayerQuant(
+        w_scale=w_scale, x_scale=x_scale, x_zero_point=zp,
+        x_signed=bool(signed_inputs),
+        out_scale=out_scale.astype(jnp.float32),
+        out_zero_point=jnp.asarray(0, jnp.int32), bias=bias)
+    return lq, w_q

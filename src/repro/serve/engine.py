@@ -1,0 +1,69 @@
+"""Batched serving engine: chunked prefill + batched greedy/sampled decode.
+
+The engine owns jitted prefill/decode functions for one (arch, batch,
+max_len) bucket and exposes a request-batch API. RAELLA integration: with
+``cfg.pim_mode == 'fast'`` the weight-static projections run the centered
+int8 path (the paper's Eq. 1 on the MXU) — see core.pim_linear; with
+'exact' the full accelerator simulation (small models only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray        # (B, steps) generated ids
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Any, *,
+                 max_len: int = 512, temperature: float = 0.0):
+        if not cfg.causal:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            lambda p, toks: T.prefill(p, cfg, toks, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, st, tok: T.decode_step(p, cfg, st, tok))
+
+    def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        logits = logits[:, -1, :]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None]
+        return jax.random.categorical(
+            key, logits / self.temperature, axis=-1)[:, None]
+
+    def generate(self, prompts: np.ndarray, *, steps: int,
+                 seed: int = 0) -> GenerationResult:
+        """prompts: (B, prompt_len) int32 token ids."""
+        toks = jnp.asarray(prompts, jnp.int32)
+        B, plen = toks.shape
+        if plen + steps > self.max_len:
+            raise ValueError("prompt + steps exceeds engine max_len")
+        key = jax.random.key(seed)
+        logits, state = self._prefill(self.params, toks)
+        out = []
+        tok = self._pick(logits, key)
+        out.append(tok)
+        for i in range(steps - 1):
+            key = jax.random.fold_in(key, i)
+            logits, state = self._decode(self.params, state, tok)
+            tok = self._pick(logits, key)
+            out.append(tok)
+        gen = np.asarray(jnp.concatenate(out, axis=1))
+        return GenerationResult(tokens=gen, prompt_len=plen, steps=steps)

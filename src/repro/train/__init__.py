@@ -1,0 +1,2 @@
+# Submodules imported lazily (checkpoint/compression/fault_tolerance pull in
+# threading/IO machinery that dryrun does not need).

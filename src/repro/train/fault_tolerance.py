@@ -1,0 +1,143 @@
+"""Fault tolerance for 1000+-node runs: restart, elasticity, stragglers.
+
+Three mechanisms, all exercised by tests:
+
+1. **Checkpoint/restart** — ``resilient_train`` wraps the train loop:
+   periodic (async) checkpoints, automatic restore-on-start, and a bounded
+   retry loop around step execution so a transient failure resumes from the
+   last checkpoint instead of killing the job.
+
+2. **Elastic re-meshing** — checkpoints are mesh-shape-agnostic (host
+   arrays + logical shardings), so ``restore`` can re-place state onto a
+   different device count after node loss; ``elastic_data_axis`` picks the
+   largest usable data-parallel degree for the surviving devices.
+
+3. **Straggler detection** — ``StragglerMonitor`` keeps a robust running
+   estimate of step time (median + MAD) and flags steps exceeding a
+   threshold multiple; the launcher's response at scale is documented in
+   DESIGN.md (re-schedule the slow host's shards / drop to the elastic
+   path). On one host we surface the signal and count events.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import train_loop as tl
+
+
+# ------------------------------------------------------------- stragglers
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x the running median."""
+    threshold: float = 3.0
+    window: int = 50
+    min_samples: int = 5
+    times: list = dataclasses.field(default_factory=list)
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record a step time; True if this step is a straggler."""
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
+            if dt > self.threshold * med:
+                is_straggler = True
+                self.events.append((step, dt, med))
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return is_straggler
+
+    def hook(self):
+        def _h(state, metrics, dt):
+            if self.observe(state.step, dt):
+                print(f"[straggler] step {state.step}: {dt*1e3:.0f} ms "
+                      f"(median {statistics.median(self.times)*1e3:.0f} ms)")
+        return _h
+
+
+# ------------------------------------------------------------- elasticity
+def elastic_data_axis(n_devices: int, model_parallel: int) -> int:
+    """Largest data-parallel degree for the surviving device count."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot hold model-parallel degree "
+            f"{model_parallel}")
+    return n_devices // model_parallel
+
+
+# ------------------------------------------------------------- restart loop
+def resilient_train(cfg: ArchConfig,
+                    opt_cfg: opt.AdamWConfig,
+                    data_fn: Callable[[int], Iterator[dict]],
+                    *,
+                    num_steps: int,
+                    ckpt_dir: str,
+                    ckpt_every: int = 50,
+                    max_restarts: int = 3,
+                    monitor: StragglerMonitor | None = None,
+                    fail_injector: Callable[[int], None] | None = None
+                    ) -> tl.TrainState:
+    """Train with periodic async checkpoints and restore-on-failure.
+
+    ``data_fn(start_step)`` rebuilds the (deterministic) data stream from a
+    step offset so restarts do not replay or skip batches.
+    ``fail_injector(step)`` lets tests raise mid-run to exercise recovery.
+    """
+    from repro.models import transformer as T
+
+    saver = ckpt.AsyncCheckpointer(ckpt_dir)
+    monitor = monitor or StragglerMonitor()
+    restarts = 0
+
+    while True:
+        # ---- (re)build state: restore if a checkpoint exists
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        opt_state = opt.init_state(opt_cfg, params)
+        state = tl.TrainState(params, opt_state, 0)
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            (state.params, state.opt_state), step, _ = ckpt.restore(
+                ckpt_dir, (state.params, state.opt_state))
+            state.step = step
+            print(f"[restart] resumed from step {step}")
+        step_fn = jax.jit(tl.make_train_step(cfg, opt_cfg),
+                          donate_argnums=(0, 1))
+        data_iter = data_fn(state.step)
+
+        def hook(st, metrics, dt):
+            monitor.hook()(st, metrics, dt)
+            if st.step % ckpt_every == 0:
+                saver.save(st.step, (st.params, st.opt_state))
+
+        try:
+            while state.step < num_steps:
+                batch = next(data_iter)
+                if fail_injector is not None:
+                    fail_injector(state.step)
+                t0 = time.monotonic()
+                state.params, state.opt_state, metrics = step_fn(
+                    state.params, state.opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                state.step += 1
+                hook(state, metrics, time.monotonic() - t0)
+            saver.wait()
+            saver.save(state.step, (state.params, state.opt_state))
+            saver.wait()
+            return state
+        except (RuntimeError, ValueError, OSError) as e:
+            restarts += 1
+            print(f"[failure] step {state.step}: {e!r} "
+                  f"(restart {restarts}/{max_restarts})")
+            saver.wait()
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,75 @@
+"""Algorithm 1 (Adaptive Weight Slicing) behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptive as ad
+from repro.core import slicing as sl
+
+
+def _layer(rng, rows=512, cols=24, w_scale=0.04, skew=0.0):
+    w = rng.normal(skew, w_scale, size=(rows, cols)).astype(np.float32)
+    x = np.maximum(rng.normal(0.2, 0.35, size=(10, rows)), 0).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(x)
+
+
+class TestMeasureError:
+    def test_error_decreases_with_more_slices(self):
+        rng = np.random.default_rng(0)
+        w, x = _layer(rng, w_scale=0.12)
+        e_coarse = ad.measure_error(w, x, (4, 4))
+        e_fine = ad.measure_error(w, x, (1,) * 8)
+        assert e_fine <= e_coarse
+
+    def test_zero_offset_worse_than_center(self):
+        rng = np.random.default_rng(1)
+        # per-channel skew makes differential encoding saturate (Fig. 5)
+        w = rng.normal(0, 0.03, size=(512, 16)) + rng.uniform(-0.08, 0.08, (1, 16))
+        w = jnp.asarray(w, jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, size=(10, 512)), 0),
+                        jnp.float32)
+        e_center = ad.measure_error(w, x, (4, 2, 2), encode_mode="center")
+        e_zero = ad.measure_error(w, x, (4, 2, 2), encode_mode="zero")
+        assert e_center < e_zero
+
+
+class TestFindBestSlicing:
+    def test_respects_budget(self):
+        rng = np.random.default_rng(2)
+        w, x = _layer(rng)
+        choice = ad.find_best_slicing(w, x, error_budget=0.09)
+        assert choice.error < 0.09
+
+    def test_fewest_slices_preferred(self):
+        """All candidate groups with fewer slices must have failed budget."""
+        rng = np.random.default_rng(3)
+        w, x = _layer(rng)
+        choice = ad.find_best_slicing(w, x, error_budget=0.09)
+        for s, e in choice.all_errors.items():
+            if len(s) < choice.n_slices:
+                assert e >= 0.09
+
+    def test_last_layer_conservative(self):
+        rng = np.random.default_rng(4)
+        w, x = _layer(rng, rows=128, cols=8)
+        choice = ad.find_best_slicing(w, x, last_layer=True)
+        assert choice.slicing == (1,) * 8
+
+    def test_noise_pushes_to_more_slices(self):
+        """Fig. 15: adaptive slicing is noise-aware — more noise, more slices."""
+        rng = np.random.default_rng(5)
+        w, x = _layer(rng, cols=16, w_scale=0.05)
+        clean = ad.find_best_slicing(w, x, error_budget=0.09)
+        noisy = ad.find_best_slicing(w, x, error_budget=0.09,
+                                     noise_level=0.10,
+                                     key=jax.random.key(0))
+        assert noisy.n_slices >= clean.n_slices
+
+    def test_typical_layer_uses_three_slices(self):
+        """Paper Fig. 7: most (bell-curve-weight) layers land on 3 slices."""
+        rng = np.random.default_rng(6)
+        w, x = _layer(rng, w_scale=0.04)
+        choice = ad.find_best_slicing(w, x, error_budget=0.09)
+        assert choice.n_slices <= 4  # 3 typical; allow 4 for sampling noise

@@ -1,0 +1,218 @@
+"""Crossbar simulator, speculation, and PIM-linear exactness tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import crossbar as xbar
+from repro.core import pim_linear as pl
+from repro.core import slicing as sl
+from repro.core import speculation as spec
+
+
+def _rand_layer(rng, rows, cols, w_std=20):
+    w_signed = np.clip(rng.normal(0, w_std, size=(rows, cols)), -127, 127)
+    w_u = (np.round(w_signed) + 128).astype(np.int64)
+    x = rng.integers(0, 256, size=(4, rows))
+    return w_u, jnp.asarray(x)
+
+
+class TestCrossbarIdeal:
+    """With the ADC bypassed, sliced arithmetic must be *exact* (Table 1)."""
+
+    @pytest.mark.parametrize("slicing", [(4, 4), (4, 2, 2), (2, 2, 2, 2), (1,) * 8])
+    @pytest.mark.parametrize("rows", [64, 512, 900])
+    def test_exact_reconstruction(self, slicing, rows):
+        rng = np.random.default_rng(0)
+        w_u, x = _rand_layer(rng, rows, 6)
+        enc = co.encode(w_u, slicing)
+        psum, _ = xbar.forward(x, enc, (1,) * 8, ideal=True)
+        want = xbar.matmul_reference(x, jnp.asarray(w_u))
+        np.testing.assert_array_equal(np.asarray(psum), np.asarray(want))
+
+    @pytest.mark.parametrize("input_slicing", [(4, 2, 2), (4, 4), (2,) * 4])
+    def test_exact_any_input_slicing(self, input_slicing):
+        rng = np.random.default_rng(1)
+        w_u, x = _rand_layer(rng, 300, 5)
+        enc = co.encode(w_u, (4, 2, 2))
+        psum, _ = xbar.forward(x, enc, input_slicing, ideal=True)
+        want = xbar.matmul_reference(x, jnp.asarray(w_u))
+        np.testing.assert_array_equal(np.asarray(psum), np.asarray(want))
+
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def test_exact_property(self, seed):
+        rng = np.random.default_rng(seed)
+        rows = int(rng.integers(2, 800))
+        cols = int(rng.integers(1, 5))
+        slicing = sl.enumerate_slicings()[int(rng.integers(0, 108))]
+        w_u = rng.integers(0, 256, size=(rows, cols), dtype=np.int64)
+        x = jnp.asarray(rng.integers(0, 256, size=(2, rows)))
+        enc = co.encode(w_u, slicing, mode="center")
+        psum, _ = xbar.forward(x, enc, (1,) * 8, ideal=True)
+        want = xbar.matmul_reference(x, jnp.asarray(w_u))
+        np.testing.assert_array_equal(np.asarray(psum), np.asarray(want))
+
+
+class TestADC:
+    def test_clip_bounds(self):
+        vals = jnp.asarray([-1000, -65, -64, 0, 63, 64, 1000])
+        out, sat = adc_lib.convert(vals, adc_lib.RAELLA_ADC)
+        np.testing.assert_array_equal(np.asarray(out), [-64, -64, -64, 0, 63, 63, 63])
+        np.testing.assert_array_equal(np.asarray(sat),
+                                      [True, True, True, False, True, True, True])
+
+    def test_lsb_fidelity(self):
+        """Step size 1: in-range sums convert exactly (paper §3)."""
+        vals = jnp.arange(-64, 64)
+        out, sat = adc_lib.convert(vals, adc_lib.RAELLA_ADC)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+    def test_noise_changes_output(self):
+        vals = jnp.zeros((1000,), jnp.int32)
+        pos = jnp.full((1000,), 200, jnp.int32)
+        neg = jnp.full((1000,), 200, jnp.int32)
+        out, _ = adc_lib.convert(vals, adc_lib.RAELLA_ADC, noise_level=0.12,
+                                 pos_sum=pos, neg_sum=neg,
+                                 key=jax.random.key(0))
+        assert float(jnp.std(out.astype(jnp.float32))) > 0.5
+
+
+class TestSaturationBehaviour:
+    def test_centered_saturates_less_than_zero_offset(self):
+        """The paper's core fidelity claim (Fig. 5, Table 4)."""
+        rng = np.random.default_rng(7)
+        # skewed filter: mostly-negative weights
+        w_signed = np.clip(rng.normal(-35, 20, size=(512, 16)), -127, 127)
+        w_u = (np.round(w_signed) + 128).astype(np.int64)
+        x = jnp.asarray(rng.integers(0, 256, size=(8, 512)))
+        enc_c = co.encode(w_u, (4, 2, 2), mode="center")
+        enc_z = co.encode(w_u, (4, 2, 2), mode="zero")
+        _, st_c = xbar.forward(x, enc_c, (1,) * 8)
+        _, st_z = xbar.forward(x, enc_z, (1,) * 8)
+        assert int(st_c.saturations) < int(st_z.saturations)
+
+    def test_low_saturation_rate_when_centered(self):
+        rng = np.random.default_rng(8)
+        w_signed = np.clip(rng.normal(0, 25, size=(512, 32)), -127, 127)
+        w_u = (np.round(w_signed) + 128).astype(np.int64)
+        # right-skewed unsigned inputs (post-ReLU-like)
+        x = jnp.asarray(np.clip(rng.exponential(30, size=(8, 512)), 0, 255).astype(np.int64))
+        enc = co.encode(w_u, (1,) * 8, mode="center")
+        _, st = xbar.forward(x, enc, (1,) * 8)
+        rate = int(st.saturations) / int(st.conversions_possible)
+        assert rate < 0.01  # minimal slicing: ~1e-7 in paper; allow slack
+
+
+class TestSpeculation:
+    def test_matches_static_when_no_saturation(self):
+        """If nothing saturates, speculation == static slicing == ideal."""
+        rng = np.random.default_rng(3)
+        w_signed = np.clip(rng.normal(0, 6, size=(64, 4)), -127, 127)
+        w_u = (np.round(w_signed) + 128).astype(np.int64)
+        x = jnp.asarray(rng.integers(0, 40, size=(3, 64)))
+        enc = co.encode(w_u, (1,) * 8, mode="center")
+        psum_spec, st = spec.forward(x, enc)
+        want = xbar.matmul_reference(x, jnp.asarray(w_u))
+        # center term means sums are small; check exactness holds
+        np.testing.assert_array_equal(np.asarray(psum_spec), np.asarray(want))
+
+    def test_recovery_reduces_error_vs_no_recovery(self):
+        """Speculation+recovery must be at least as accurate as aggressive
+        static (4,2,2) input slicing alone."""
+        rng = np.random.default_rng(4)
+        w_signed = np.clip(rng.normal(10, 45, size=(512, 24)), -127, 127)
+        w_u = (np.round(w_signed) + 128).astype(np.int64)
+        x = jnp.asarray(rng.integers(0, 256, size=(8, 512)))
+        enc = co.encode(w_u, (4, 2, 2), mode="center")
+        want = np.asarray(xbar.matmul_reference(x, jnp.asarray(w_u)), np.int64)
+        psum_spec, st = spec.forward(x, enc)
+        psum_aggr, _ = xbar.forward(x, enc, (4, 2, 2))
+        err_spec = np.abs(np.asarray(psum_spec, np.int64) - want).mean()
+        err_aggr = np.abs(np.asarray(psum_aggr, np.int64) - want).mean()
+        assert err_spec <= err_aggr
+
+    def test_convert_savings(self):
+        """Speculation should need far fewer converts than recovery-only
+        (paper: ~60% reduction at ~2% failure rate). Uses realistic DNN-like
+        distributions: peaked (Laplacian) weights, sparse right-skewed inputs."""
+        rng = np.random.default_rng(5)
+        w_signed = np.clip(rng.laplace(0, 10, size=(512, 32)), -127, 127)
+        w_u = (np.round(w_signed) + 128).astype(np.int64)
+        x_raw = rng.exponential(12, size=(8, 512)) * (rng.random((8, 512)) > 0.4)
+        x = jnp.asarray(np.clip(x_raw, 0, 255).astype(np.int64))
+        enc = co.encode(w_u, (4, 2, 2), mode="center")
+        _, st = spec.forward(x, enc)
+        saving = 1.0 - float(st.adc_converts) / float(st.no_spec_converts)
+        assert saving > 0.45
+        assert float(st.failure_rate) < 0.15
+        assert st.cycles == 11  # 3 speculation + 8 recovery (paper §6.1.1)
+
+
+class TestPimLinear:
+    def test_exact_path_close_to_float(self):
+        rng = np.random.default_rng(6)
+        w = jnp.asarray(rng.normal(0, 0.05, size=(256, 32)), jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, size=(10, 256)), 0),
+                        jnp.float32)
+        plan = pl.prepare(w, x, weight_slicing=(4, 2, 2), speculation=True)
+        y = pl.forward_exact(x, plan)
+        y_ref = x @ w
+        rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+        assert rel < 0.05
+
+    def test_signed_inputs_two_pass(self):
+        rng = np.random.default_rng(9)
+        w = jnp.asarray(rng.normal(0, 0.05, size=(128, 16)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 0.5, size=(6, 128)), jnp.float32)  # signed
+        plan = pl.prepare(w, x, weight_slicing=(2, 2, 2, 2), speculation=False)
+        assert plan.lq.x_signed
+        y = pl.forward_exact(x, plan)
+        y_ref = x @ w
+        rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+        assert rel < 0.05
+
+    def test_int_reference_matches_dequant_algebra(self):
+        rng = np.random.default_rng(10)
+        w = jnp.asarray(rng.normal(0, 0.1, size=(64, 8)), jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.2, 0.3, size=(4, 64)), 0),
+                        jnp.float32)
+        plan = pl.prepare(w, x, speculation=False)
+        y_ref = pl.forward_int_reference(x, plan)
+        rel = float(jnp.linalg.norm(y_ref - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.03  # pure 8b quantization error
+
+    def test_exact_equals_int_reference_when_ideal_conditions(self):
+        """Small weights/inputs -> no saturation -> exact sim == int ref."""
+        rng = np.random.default_rng(11)
+        w = jnp.asarray(rng.normal(0, 0.02, size=(100, 12)), jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.1, 0.1, size=(5, 100)), 0),
+                        jnp.float32)
+        plan = pl.prepare(w, x, weight_slicing=(1,) * 8, speculation=False)
+        y_sim = pl.forward_exact(x, plan, input_slicing=(1,) * 8)
+        y_ref = pl.forward_int_reference(x, plan)
+        np.testing.assert_allclose(np.asarray(y_sim), np.asarray(y_ref),
+                                   rtol=0, atol=1e-5)
+
+    def test_fast_path_beats_symmetric_quant_for_skewed_weights(self):
+        """Centered fast path (Eq. 1 on TPU) should reduce quantization error
+        for skewed per-channel weight distributions."""
+        rng = np.random.default_rng(12)
+        base = rng.normal(0, 0.02, size=(256, 32))
+        skew = rng.uniform(0.2, 0.5, size=(1, 32))  # big per-channel offsets
+        w = jnp.asarray(base + skew, jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.3, 0.3, size=(16, 256)), 0),
+                        jnp.float32)
+        plan = pl.prepare(w, x, speculation=False)
+        y_fast = pl.forward_fast(x, plan)
+        y_float = x @ w
+        # symmetric int8 reference
+        y_sym = pl.forward_int_reference(x, plan)
+        err_fast = float(jnp.abs(y_fast - y_float).mean())
+        err_sym = float(jnp.abs(y_sym - y_float).mean())
+        assert err_fast < err_sym

@@ -1,0 +1,133 @@
+"""Titanium Law energy/throughput model vs the paper's published numbers."""
+
+import numpy as np
+import pytest
+
+from repro.core import energy as en
+from repro.core import mapping as mp
+from repro.core import workloads as wl
+
+
+def _geomean(xs):
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+@pytest.fixture(scope="module")
+def layer_sets():
+    return {n: f() for n, f in wl.WORKLOADS.items()}
+
+
+class TestConvertsPerMac:
+    """Fig. 14 progression — exact combinatorics, no calibration."""
+
+    def test_ideal_sequence(self):
+        def ideal(a):
+            return a.n_weight_slices * a.converts_per_column_pass() / a.rows
+        assert ideal(en.ISAAC_8B) == pytest.approx(0.25)
+        assert ideal(en.CENTER_OFFSET_ONLY) == pytest.approx(0.063, abs=0.002)
+        assert ideal(en.CENTER_ADAPTIVE) == pytest.approx(0.047, abs=0.002)
+        assert ideal(en.RAELLA) == pytest.approx(0.018, abs=0.002)
+
+    def test_convert_reduction_up_to_14x(self):
+        isaac = en.ISAAC_8B.n_weight_slices * en.ISAAC_8B.converts_per_column_pass() / 128
+        raella = en.RAELLA.n_weight_slices * en.RAELLA.converts_per_column_pass() / 512
+        assert 12 < isaac / raella < 15  # paper: "up to 14x fewer ADC converts"
+
+    def test_measured_monotone(self, layer_sets):
+        seq = [en.ISAAC_8B, en.CENTER_OFFSET_ONLY, en.CENTER_ADAPTIVE, en.RAELLA]
+        vals = [en.analyze_dnn(a, layer_sets["resnet18"]).converts_per_mac
+                for a in seq]
+        assert vals == sorted(vals, reverse=True)
+
+
+class TestTitaniumLaw:
+    def test_equation(self):
+        # E = E/convert x converts/MAC x MACs x 1/util
+        assert en.titanium_law(2.0, 0.25, 100, 0.5) == pytest.approx(100.0)
+
+    def test_adc_energy_scaling(self):
+        assert en.adc_energy_per_convert(8) / en.adc_energy_per_convert(7) \
+            == pytest.approx(2.0)  # exponential in resolution [65]
+
+
+class TestFig12:
+    """Efficiency/throughput vs 8b ISAAC across the seven DNNs."""
+
+    def test_efficiency_geomean(self, layer_sets):
+        ratios = [en.analyze_dnn(en.ISAAC_8B, ls).energy
+                  / en.analyze_dnn(en.RAELLA, ls).energy
+                  for ls in layer_sets.values()]
+        g = _geomean(ratios)
+        assert 3.3 <= g <= 4.5, g  # paper: 3.9x geomean
+        assert min(ratios) > 2.0 and max(ratios) < 5.5  # paper: 2.9-4.9x
+
+    def test_throughput_geomean(self, layer_sets):
+        ratios = [en.analyze_dnn(en.ISAAC_8B, ls).latency_ns
+                  / en.analyze_dnn(en.RAELLA, ls).latency_ns
+                  for ls in layer_sets.values()]
+        g = _geomean(ratios)
+        assert 1.6 <= g <= 2.5, g  # paper: 2.0x geomean
+        assert min(ratios) < 1.0, ratios  # paper: compact DNNs can be slower (0.7x)
+
+    def test_no_spec_tradeoff(self, layer_sets):
+        """Without speculation: lower efficiency gain, higher throughput gain."""
+        eff_s, eff_n, th_s, th_n = [], [], [], []
+        for ls in layer_sets.values():
+            ei = en.analyze_dnn(en.ISAAC_8B, ls)
+            es_ = en.analyze_dnn(en.RAELLA, ls)
+            nn = en.analyze_dnn(en.RAELLA_NO_SPEC, ls)
+            eff_s.append(ei.energy / es_.energy)
+            eff_n.append(ei.energy / nn.energy)
+            th_s.append(ei.latency_ns / es_.latency_ns)
+            th_n.append(ei.latency_ns / nn.latency_ns)
+        assert _geomean(eff_n) < _geomean(eff_s)   # spec buys efficiency
+        assert _geomean(th_n) > _geomean(th_s)     # ...at a throughput cost
+        assert 2.3 <= _geomean(th_n) <= 3.2        # paper: 2.7x
+
+    def test_isaac_adc_dominated(self, layer_sets):
+        rep = en.analyze_dnn(en.ISAAC_8B, layer_sets["resnet18"], replicate=False)
+        share = rep.energy_breakdown["e_adc"] / rep.energy
+        assert share >= 0.45  # Fig. 1: ADCs dominate PIM energy
+
+    def test_raella_adc_share_reduced(self, layer_sets):
+        rep = en.analyze_dnn(en.RAELLA, layer_sets["resnet18"], replicate=False)
+        share = rep.energy_breakdown["e_adc"] / rep.energy
+        assert share < 0.25
+
+    def test_compact_dnns_gain_least(self, layer_sets):
+        """Paper §6.3: small filters poorly utilize RAELLA's large crossbars."""
+        gains = {n: en.analyze_dnn(en.ISAAC_8B, ls).energy
+                 / en.analyze_dnn(en.RAELLA, ls).energy
+                 for n, ls in layer_sets.items()}
+        assert gains["mobilenet_v2"] == min(gains.values())
+
+
+class TestMapping:
+    def test_segmentation(self):
+        l = mp.LayerShape("x", filter_len=1100, n_filters=64, n_positions=10)
+        m = mp.map_layer(l, 512, 512, 3)
+        assert m.n_segments == 3
+        assert m.n_crossbars == 3 * 1  # 64 filters at 170/xbar -> 1
+
+    def test_depthwise_poor_utilization(self):
+        l = mp.LayerShape("dw", filter_len=9, n_filters=128, n_positions=100,
+                          depthwise=True)
+        m = mp.map_layer(l, 512, 512, 3)
+        assert m.utilization < 0.1
+
+    def test_toeplitz_only_for_short_filters(self):
+        short = mp.map_layer(mp.LayerShape("s", 100, 8, 50), 512, 512, 3)
+        long_ = mp.map_layer(mp.LayerShape("l", 1000, 8, 50), 512, 512, 3)
+        assert short.toeplitz_positions > 1
+        assert long_.toeplitz_positions == 1
+
+    def test_replication_respects_budget(self):
+        layers = [mp.LayerShape(f"l{i}", 512, 512, 1000) for i in range(4)]
+        maps = [mp.map_layer(l, 512, 512, 3) for l in layers]
+        lats = [1000.0, 2000.0, 4000.0, 8000.0]
+        out = mp.greedy_replicate(maps, lats, total_crossbars=64)
+        used = sum(m.n_crossbars * m.replication for m in out)
+        assert used <= 64
+        # slower layers get at least as many copies
+        reps = [m.replication for m in out]
+        assert reps == sorted(reps)

@@ -1,0 +1,114 @@
+"""Unit + property tests for bit-slicing and Center+Offset encoding."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import center_offset as co
+from repro.core import slicing as sl
+
+
+class TestSlicings:
+    def test_enumeration_count(self):
+        assert len(sl.enumerate_slicings(8, 4)) == 108  # paper §4.2.2
+
+    def test_enumeration_valid(self):
+        for s in sl.enumerate_slicings(8, 4):
+            assert sum(s) == 8
+            assert all(1 <= b <= 4 for b in s)
+
+    def test_bounds(self):
+        assert sl.slice_bounds((4, 2, 2)) == ((7, 4), (3, 2), (1, 0))
+        assert sl.slice_bounds((1,) * 8) == tuple((b, b) for b in range(7, -1, -1))
+
+    def test_shifts(self):
+        assert sl.slice_shifts((4, 2, 2)) == (4, 2, 0)
+
+
+class TestCropReconstruct:
+    @hypothesis.given(st.integers(-255, 255),
+                      st.sampled_from(sl.enumerate_slicings(8, 4)))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_signed_roundtrip(self, x, slicing):
+        xs = jnp.asarray([x])
+        slices = sl.slice_signed(xs, slicing)
+        rec = sl.reconstruct(slices, slicing)
+        assert int(rec[0]) == x
+
+    @hypothesis.given(st.integers(0, 255),
+                      st.sampled_from(sl.enumerate_slicings(8, 4)))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_unsigned_roundtrip(self, x, slicing):
+        xs = jnp.asarray([x])
+        slices = sl.slice_unsigned(xs, slicing)
+        rec = sl.reconstruct(slices, slicing)
+        assert int(rec[0]) == x
+
+    def test_slice_value_range(self):
+        x = jnp.arange(-255, 256)
+        for slicing in [(4, 4), (4, 2, 2), (1,) * 8]:
+            for s, width in zip(sl.slice_signed(x, slicing), slicing):
+                assert int(jnp.max(jnp.abs(s))) <= 2 ** width - 1
+
+    def test_reslice_to_1b(self):
+        x = jnp.asarray([13, -13, 0, 15])
+        subs = sl.reslice_to_1b(x, 4)
+        rec = sum(s.astype(jnp.int32) << b for s, b in zip(subs, [3, 2, 1, 0]))
+        np.testing.assert_array_equal(np.asarray(rec), [13, -13, 0, 15])
+
+
+class TestCenterOffset:
+    def test_encode_decode_exact(self):
+        rng = np.random.default_rng(0)
+        w = rng.integers(0, 256, size=(300, 17), dtype=np.int64)
+        for mode in ["center", "zero"]:
+            enc = co.encode(w, (4, 2, 2), mode=mode)
+            np.testing.assert_array_equal(co.decode(enc), w)
+
+    def test_encode_decode_multi_segment(self):
+        rng = np.random.default_rng(1)
+        w = rng.integers(0, 256, size=(1100, 5), dtype=np.int64)
+        enc = co.encode(w, (4, 4))
+        assert enc.n_segments == 3
+        np.testing.assert_array_equal(co.decode(enc), w)
+
+    def test_centers_balance_columns(self):
+        """Eq. 2 centers beat zero-centers on their own cost objective, and
+        reduce the mean |column sum of slices| for skewed filters."""
+        rng = np.random.default_rng(2)
+        # mostly-negative weights in the signed domain (paper Fig. 5 setup)
+        w_signed = np.clip(rng.normal(-40, 25, size=(512, 8)), -127, 127)
+        w = (w_signed + 128).astype(np.int64)
+        slicing = (4, 2, 2)
+        enc_c = co.encode(w, slicing, mode="center")
+        enc_z = co.encode(w, slicing, mode="zero")
+
+        def mean_abs_colsum(enc):
+            return np.abs(enc.planes.astype(np.int64).sum(axis=2)).mean()
+
+        assert mean_abs_colsum(enc_c) < mean_abs_colsum(enc_z)
+
+    def test_center_term_matches_decode(self):
+        rng = np.random.default_rng(3)
+        w = rng.integers(0, 256, size=(600, 4), dtype=np.int64)
+        x = jnp.asarray(rng.integers(0, 256, size=(5, 600)))
+        enc = co.encode(w, (4, 2, 2))
+        ct = co.center_term(x, enc)
+        # brute force: sum over segments of phi_seg * sum(x_seg)
+        xp = np.pad(np.asarray(x), ((0, 0), (0, enc.n_segments * 512 - 600)))
+        xs = xp.reshape(5, enc.n_segments, 512)
+        want = np.einsum("bs,sc->bc", xs.sum(-1), enc.centers)
+        np.testing.assert_array_equal(np.asarray(ct), want)
+
+    @hypothesis.given(st.integers(0, 2 ** 32 - 1))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_encode_decode_property(self, seed):
+        rng = np.random.default_rng(seed)
+        rows = int(rng.integers(1, 700))
+        cols = int(rng.integers(1, 6))
+        slicing = sl.enumerate_slicings()[int(rng.integers(0, 108))]
+        w = rng.integers(0, 256, size=(rows, cols), dtype=np.int64)
+        enc = co.encode(w, slicing)
+        np.testing.assert_array_equal(co.decode(enc), w)

@@ -1,0 +1,111 @@
+"""Loop-aware HLO analysis, sharding rules, and int8 KV-cache tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding as dsh
+from repro.launch import hlo_analysis as hlo
+from repro.models import transformer as T
+
+
+class TestHloAnalysis:
+    def test_scan_flops_exact(self):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)).compile()
+        costs = hlo.analyze(c.as_text())
+        want = 5 * 2 * 64 * 128 * 128
+        assert costs.flops == pytest.approx(want, rel=1e-6)
+        # XLA's own analysis counts the loop body once — ours must not
+        assert c.cost_analysis()["flops"] < costs.flops
+
+    def test_nested_scan_flops(self):
+        def f(x, ws):
+            def outer(c, wpair):
+                def inner(ci, w):
+                    return ci @ w, None
+                c2, _ = jax.lax.scan(inner, c, wpair)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, ws)
+            return y
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((32, 64), jnp.float32),
+            jax.ShapeDtypeStruct((3, 2, 64, 64), jnp.float32)).compile()
+        costs = hlo.analyze(c.as_text())
+        want = 6 * 2 * 32 * 64 * 64
+        assert costs.flops == pytest.approx(want, rel=1e-6)
+
+    def test_roofline_terms(self):
+        t = hlo.roofline_terms(197e12, 0.0, 0.0)
+        assert t["bottleneck"] == "compute"
+        assert t["roofline_fraction"] == pytest.approx(1.0)
+        t = hlo.roofline_terms(1e12, 819e9 * 2, 0.0)
+        assert t["bottleneck"] == "memory"
+
+
+class TestShardingRules:
+    def test_spec_for_resolves_axes(self):
+        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        with dsh.axis_rules(dsh.DEFAULT_RULES):
+            assert dsh.spec_for(("batch", "seq"), mesh) == P("data", "model")
+            # duplicate mesh-axis use degrades to replication
+            assert dsh.spec_for(("seq", "vocab"), mesh) == P("model")
+
+    def test_fit_spec_drops_indivisible(self):
+        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        spec = dsh.fit_spec_to_shape(P("data", "model"), (3, 8), mesh)
+        assert spec == P(None, "model")
+        spec = dsh.fit_spec_to_shape(P(("data", "model")), (6,), mesh)
+        assert spec == P("data")  # 6 % 2 == 0 but 6 % 4 != 0
+
+    def test_serve_rules_weights_stationary(self):
+        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        with dsh.axis_rules(dsh.SERVE_RULES):
+            # weight output dims shard over the whole mesh; no fsdp dim
+            assert dsh.spec_for(("fsdp", "tp"), mesh) == P(None, ("data", "model"))
+            assert dsh.spec_for(("batch", None), mesh) == P()
+
+
+class TestInt8KvCache:
+    def test_decode_matches_forward_within_quant_error(self):
+        cfg = configs.get("yi-6b").reduced()
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                  cfg.vocab_size)
+        full = T.forward(params, cfg, toks)
+        logits, state = T.prefill(params, cfg, toks[:, :6], max_len=8)
+        # int8 cache introduces bounded quantization error only
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, 5]), rtol=0.2, atol=0.2)
+        for t in range(6, 8):
+            logits, state = T.decode_step(params, cfg, state, toks[:, t:t + 1])
+            np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                       np.asarray(full[:, t]),
+                                       rtol=0.2, atol=0.2)
+
+    def test_cache_is_int8(self):
+        cfg = configs.get("yi-6b").reduced()
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        state = T.init_decode_state(cfg, 2, 16)
+        c = state["caches"][0]
+        assert c["k"].dtype == jnp.int8
+        assert "k_scale" in c
+
+    def test_quantize_roundtrip(self):
+        t = jax.random.normal(jax.random.key(0), (3, 4, 2, 16))
+        q, s = T._quantize_kv(t)
+        back = T._dequantize_kv(q, s, jnp.float32)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(t),
+                                   atol=float(jnp.abs(t).max()) / 100)

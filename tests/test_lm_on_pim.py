@@ -1,0 +1,40 @@
+"""Assigned-LM-zoo -> PIM workload bridge tests."""
+
+import pytest
+
+from repro import configs
+from repro.core import energy as en
+from repro.core.lm_workloads import from_arch_config
+
+
+@pytest.mark.parametrize("arch", list(configs.ASSIGNED))
+def test_macs_match_active_params(arch):
+    """One forward over T tokens through the weight-static matmuls must cost
+    ~2 * N_active_linear * T MACs (embeddings excluded: gathers, not MVMs)."""
+    cfg = configs.get(arch)
+    T = 64
+    layers = from_arch_config(cfg, tokens=T)
+    macs = sum(l.macs for l in layers)
+    # active linear params = active params minus the embedding table
+    n_lin = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    assert 0.5 < macs / (n_lin * T) < 1.6, (macs / T, n_lin)
+
+
+def test_moe_footprint_vs_active():
+    """MoE archs place all experts on crossbars but only top-k MACs flow."""
+    cfg = configs.get("phi3.5-moe-42b")
+    layers = from_arch_config(cfg, tokens=256)
+    moe = [l for l in layers if "_e" in l.name]
+    assert len(moe) == cfg.n_layers * cfg.n_experts * 3
+    active_frac = cfg.experts_per_token / cfg.n_experts
+    dense_w = sum(l.weights for l in moe)
+    macs = sum(l.macs for l in moe)
+    assert macs / (dense_w * 256) == pytest.approx(active_frac, rel=0.1)
+
+
+def test_raella_beats_isaac_on_lm_zoo():
+    cfg = configs.get("yi-6b")
+    layers = from_arch_config(cfg, tokens=128)
+    ri = en.analyze_dnn(en.ISAAC_8B, layers, replicate=False)
+    rr = en.analyze_dnn(en.RAELLA, layers, replicate=False)
+    assert 2.0 < ri.energy / rr.energy < 5.0

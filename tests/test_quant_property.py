@@ -1,0 +1,81 @@
+"""Hypothesis property tests for the quantization substrate."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import quantize as q
+
+
+def _w(seed, rows, cols, scale, offset):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(offset, scale, (rows, cols)), jnp.float32)
+
+
+class TestSymmetricQuant:
+    @hypothesis.given(st.integers(0, 2**31 - 1), st.floats(1e-3, 10.0))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_roundtrip_bounded(self, seed, scale):
+        w = _w(seed, 64, 8, scale, 0.0)
+        w_q, s = q.quantize_weights_per_channel(w)
+        back = w_q.astype(jnp.float32) * s
+        step = np.asarray(s)
+        err = np.abs(np.asarray(back - w))
+        assert (err <= step / 2 + 1e-6).all()
+
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_codes_in_range(self, seed):
+        w = _w(seed, 32, 4, 1.0, 0.0)
+        w_q, _ = q.quantize_weights_per_channel(w)
+        assert int(jnp.max(jnp.abs(w_q.astype(jnp.int32)))) <= 127
+
+
+class TestCenteredQuant:
+    @hypothesis.given(st.integers(0, 2**31 - 1),
+                      st.floats(-5.0, 5.0), st.floats(1e-2, 2.0))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_roundtrip_bounded(self, seed, offset, scale):
+        """Centered codes reconstruct within half a (finer) step even for
+        arbitrarily offset channels — the Eq. 1 payoff."""
+        w = _w(seed, 64, 8, scale, offset)
+        w_off, centers, s = q.quantize_weights_centered(w)
+        back = (w_off.astype(jnp.float32) + centers.astype(jnp.float32)) * s
+        err = np.abs(np.asarray(back - w))
+        assert (err <= np.asarray(s) / 2 + np.asarray(s) * 1e-3 + 1e-6).all()
+
+    @hypothesis.given(st.integers(0, 2**31 - 1), st.floats(0.5, 8.0))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_centered_step_never_coarser(self, seed, offset):
+        """half-range/127 <= absmax/127 always; strictly finer when offset."""
+        w = _w(seed, 64, 8, 0.3, offset)
+        _, s_sym = q.quantize_weights_per_channel(w)
+        _, _, s_cen = q.quantize_weights_centered(w)
+        assert (np.asarray(s_cen) <= np.asarray(s_sym) + 1e-9).all()
+        # with a large offset the centered scale is much finer
+        assert np.asarray(s_cen).mean() < 0.8 * np.asarray(s_sym).mean()
+
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_offsets_fit_int8(self, seed):
+        w = _w(seed, 48, 6, 1.0, 3.0)
+        w_off, _, _ = q.quantize_weights_centered(w)
+        assert w_off.dtype == jnp.int8
+
+
+class TestRequant:
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_requant_relu_range(self, seed):
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(rng.normal(0, 2, (16, 8)), jnp.float32)
+        lq = q.LayerQuant(
+            w_scale=jnp.ones((8,)), x_scale=jnp.asarray(1.0),
+            x_zero_point=jnp.asarray(0), x_signed=False,
+            out_scale=jnp.asarray(0.05), out_zero_point=jnp.asarray(0),
+            bias=None)
+        codes = q.requantize_outputs(y, lq, relu=True)
+        assert int(jnp.min(codes)) >= 0 and int(jnp.max(codes)) <= 255
+        codes = q.requantize_outputs(y, lq, relu=False)
+        assert int(jnp.min(codes)) >= -128 and int(jnp.max(codes)) <= 127
