@@ -1,0 +1,31 @@
+"""Distribution layer: logical-axis sharding rules + jax compat shims."""
+
+from repro.dist import compat as _compat
+
+_compat.install()  # before anything reads jax.sharding.*
+
+from repro.dist.sharding import (  # noqa: E402
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    MULTIPOD_SERVE_RULES,
+    SERVE_RULES,
+    axis_rules,
+    current_rules,
+    fit_spec_to_shape,
+    sanitize_shardings,
+    shard,
+    spec_for,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "MULTIPOD_SERVE_RULES",
+    "SERVE_RULES",
+    "axis_rules",
+    "current_rules",
+    "fit_spec_to_shape",
+    "sanitize_shardings",
+    "shard",
+    "spec_for",
+]

@@ -1,0 +1,99 @@
+"""Feature-gated shims for the jax public sharding API.
+
+The repo targets the modern (jax >= 0.5) surface — two-argument
+``jax.sharding.AbstractMesh``, ``jax.sharding.AxisType``, and
+``jax.make_mesh(..., axis_types=...)`` — but must also run on the pinned
+0.4.x toolchain, where ``AbstractMesh`` takes a single ``((name, size),
+...)`` tuple and axis types do not exist yet. ``install()`` patches the
+*missing* pieces into the running jax, and only those: on a jax that
+already provides the modern API every installer is a no-op, so nothing
+is ever downgraded or double-wrapped.
+
+Installed from ``repro.dist.__init__`` — importing any model / train /
+launch module therefore guarantees the shims are active.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_abstract_mesh() -> None:
+    orig = jax.sharding.AbstractMesh
+    try:
+        orig((1,), ("_probe",))
+        return  # modern signature already supported
+    except TypeError:
+        pass
+
+    # patch __init__ in place (rather than wrapping the class) so the
+    # class object — and with it isinstance checks, subclasses, and
+    # jax-internal constructions — stays identical
+    orig_init = orig.__init__
+
+    @functools.wraps(orig_init)
+    def __init__(self, axis_sizes, axis_names=None, **kwargs):
+        if axis_names is None:  # legacy ((name, size), ...) form
+            orig_init(self, axis_sizes, **kwargs)
+        else:
+            orig_init(self, tuple(zip(axis_names, axis_sizes)))
+
+    orig.__init__ = __init__
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    orig = jax.make_mesh
+    if "axis_types" in inspect.signature(orig).parameters:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        # pre-AxisType jax has exactly one behaviour (Auto, i.e. GSPMD
+        # propagation with sharding constraints), so the kwarg is dropped
+        del axis_types
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_cost_analysis() -> None:
+    comp = jax.stages.Compiled
+    orig = comp.cost_analysis
+    if getattr(orig, "_repro_compat", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        # jax < 0.5 returns a one-element list of per-program dicts;
+        # modern jax returns the dict directly
+        out = orig(self)
+        if isinstance(out, list) and len(out) == 1:
+            return out[0]
+        return out
+
+    cost_analysis._repro_compat = True
+    comp.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    """Idempotently install every missing shim."""
+    _install_abstract_mesh()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_cost_analysis()

@@ -35,7 +35,6 @@ _CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
 _COND = re.compile(r"condition=%?([\w.\-]+)")
 _BODY = re.compile(r"body=%?([\w.\-]+)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 
@@ -116,13 +115,17 @@ def parse_computations(txt: str) -> dict:
 
 
 def _operand_names(line: str) -> list[str]:
-    m = _OPERANDS.search(line[line.index("=") + 1:]) if "=" in line else None
-    # find the argument list of the op call: last '(...)' before attrs
+    # find the argument list of the op call: first '(...)' after the op name
     call = re.search(r"[a-z][a-z0-9\-]*\(([^)]*)\)", line)
     if not call:
         return []
-    return [a.strip().lstrip("%").split(" ")[-1]
-            for a in call.group(1).split(",") if a.strip()]
+    args = call.group(1)
+    # operands are "%name" tokens; typed forms ("f32[64,128]{1,0} %name")
+    # contain commas inside the shape, so splitting the list on "," breaks
+    names = re.findall(r"%([\w.\-]+)", args)
+    if names:
+        return names
+    return [a.strip().split(" ")[-1] for a in args.split(",") if a.strip()]
 
 
 def _operand_bytes(comp: Computation, line: str) -> int:

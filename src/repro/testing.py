@@ -1,0 +1,126 @@
+"""Test-support utilities.
+
+``install_hypothesis_fallback`` registers a minimal, deterministic
+stand-in for the ``hypothesis`` package when the real one is not
+installed (hermetic CI images), so property tests still collect and run.
+The fallback draws a fixed number of examples per test — the strategy
+bounds first, then seeded-random interior points — which keeps the
+property tests meaningful (boundaries are where quantization code
+breaks) and perfectly reproducible. With real hypothesis installed this
+module does nothing.
+
+Only the API surface the repo's tests use is implemented: ``given``,
+``settings``, ``assume``, ``HealthCheck``, and the ``integers`` /
+``floats`` / ``booleans`` / ``sampled_from`` / ``just`` strategies.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Example(Exception):
+    """Raised by assume() to skip one drawn example."""
+
+
+class _Strategy:
+    """Generates n deterministic examples: bounds first, then random."""
+
+    def __init__(self, gen):
+        self._gen = gen
+
+    def examples(self, rng: random.Random, n: int) -> list:
+        return self._gen(rng, n)
+
+
+def _bounded(bounds, draw):
+    def gen(rng, n):
+        vals = list(bounds)[:n]
+        while len(vals) < n:
+            vals.append(draw(rng))
+        return vals
+    return _Strategy(gen)
+
+
+def install_hypothesis_fallback() -> bool:
+    """Install the shim into sys.modules; returns True if installed,
+    False if real hypothesis is available (then nothing happens)."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _bounded((min_value, max_value),
+                        lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _bounded((min_value, max_value),
+                        lambda rng: rng.uniform(min_value, max_value))
+
+    def booleans() -> _Strategy:
+        return _bounded((False, True), lambda rng: rng.random() < 0.5)
+
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _bounded((), lambda rng: seq[rng.randrange(len(seq))])
+
+    def just(value) -> _Strategy:
+        return _bounded((value,), lambda rng: value)
+
+    def settings(**kw):
+        def deco(fn):
+            fn._hyp_settings = dict(kw)
+            return fn
+        return deco
+
+    def assume(condition):
+        if not condition:
+            raise _Example()
+        return True
+
+    def given(*strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            keep = params[:len(params) - len(strategies)]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_hyp_settings", {})
+                n = int(cfg.get("max_examples", 20))
+                rng = random.Random(0)
+                cols = [s.examples(rng, n) for s in strategies]
+                for drawn in zip(*cols):
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except _Example:
+                        continue
+
+            # hide strategy params so pytest doesn't look for fixtures
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__version__ = "0.0.0+repro-fallback"
+    strat = types.ModuleType("hypothesis.strategies")
+    for name, obj in (("integers", integers), ("floats", floats),
+                      ("booleans", booleans), ("sampled_from", sampled_from),
+                      ("just", just)):
+        setattr(strat, name, obj)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow="too_slow", data_too_large="data_too_large",
+        filter_too_much="filter_too_much")
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+    return True

@@ -1,0 +1,139 @@
+"""repro.dist coverage beyond the seed tests: shard() no-op behaviour,
+ragged fit_spec_to_shape, sanitize_shardings validation, and rule-set
+precedence (serve vs default vs multipod)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import shard
+from repro.dist import sharding as dsh
+
+
+class TestShardNoOp:
+    def test_identity_without_mesh(self):
+        x = jnp.ones((4, 8))
+        assert shard(x, "batch", "tp") is x
+
+    def test_identity_with_empty_rules(self, small_mesh):
+        x = jnp.ones((4, 8))
+        with dsh.axis_rules(()), small_mesh:
+            assert shard(x, "batch", "tp") is x
+
+    def test_rank_mismatch_raises(self, small_mesh):
+        with dsh.axis_rules(dsh.DEFAULT_RULES), small_mesh:
+            with pytest.raises(ValueError, match="rank"):
+                shard(jnp.ones((4, 8)), "batch", "seq", "tp")
+
+
+class TestShardApplies:
+    def test_constraint_under_mesh(self, small_mesh):
+        with dsh.axis_rules(dsh.DEFAULT_RULES), small_mesh:
+            out = jax.jit(lambda a: shard(a, "batch", "tp"))(jnp.ones((4, 8)))
+        assert out.sharding.spec == P("data", "model")
+
+    def test_indivisible_dim_degrades_to_replication(self, small_mesh):
+        # batch dim 3 does not divide data=2: constraint drops that axis
+        # instead of failing to compile
+        with dsh.axis_rules(dsh.DEFAULT_RULES), small_mesh:
+            out = jax.jit(lambda a: shard(a, "batch", "tp"))(jnp.ones((3, 8)))
+        assert out.sharding.spec == P(None, "model")
+
+
+class TestFitSpecRagged:
+    def test_both_axes_indivisible(self, abstract_mesh):
+        spec = dsh.fit_spec_to_shape(P("data", "model"), (3, 5), abstract_mesh)
+        assert spec == P(None, None)
+
+    def test_tuple_prefix_kept(self, abstract_mesh):
+        # 10 % (2*2) != 0 but 10 % 2 == 0: keep the ("data",) prefix
+        spec = dsh.fit_spec_to_shape(P(("data", "model"), None), (10, 7),
+                                     abstract_mesh)
+        assert spec == P("data", None)
+
+    def test_rank_pad_not_required(self, abstract_mesh):
+        # shorter spec than shape is fine (trailing dims replicated)
+        spec = dsh.fit_spec_to_shape(P("data"), (4, 9, 2), abstract_mesh)
+        assert spec == P("data")
+
+    def test_overlong_spec_rejected(self, abstract_mesh):
+        with pytest.raises(ValueError, match="rank"):
+            dsh.fit_spec_to_shape(P("data", "model"), (4,), abstract_mesh)
+
+    def test_zero_dim_replicates(self, abstract_mesh):
+        # 0 % n == 0, but a dim of 1 cannot be split
+        spec = dsh.fit_spec_to_shape(P("data", "model"), (1, 4), abstract_mesh)
+        assert spec == P(None, "model")
+
+
+class TestSanitizeShardings:
+    def _sh(self, mesh, *axes):
+        return NamedSharding(mesh, P(*axes))
+
+    def test_refits_indivisible(self, small_mesh):
+        sh = {"a": self._sh(small_mesh, "data", "model")}
+        abstract = {"a": jax.ShapeDtypeStruct((3, 8), jnp.float32)}
+        out = dsh.sanitize_shardings(sh, abstract)
+        assert out["a"].spec == P(None, "model")
+
+    def test_mismatched_structure_rejected(self, small_mesh):
+        sh = {"a": self._sh(small_mesh, "data")}
+        abstract = {"a": jax.ShapeDtypeStruct((4,), jnp.float32),
+                    "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+        with pytest.raises((ValueError, KeyError)):
+            dsh.sanitize_shardings(sh, abstract)
+
+    def test_overlong_spec_rejected(self, small_mesh):
+        sh = {"a": self._sh(small_mesh, "data", "model")}
+        abstract = {"a": jax.ShapeDtypeStruct((8,), jnp.float32)}
+        with pytest.raises(ValueError):
+            dsh.sanitize_shardings(sh, abstract)
+
+    def test_non_sharding_leaves_pass_through(self, small_mesh):
+        sh = {"a": self._sh(small_mesh, "data"), "n": None}
+        abstract = {"a": jax.ShapeDtypeStruct((4,), jnp.float32), "n": None}
+        out = dsh.sanitize_shardings(sh, abstract)
+        assert out["n"] is None
+
+
+class TestRulePrecedence:
+    def test_default_vs_serve_weights(self, abstract_mesh):
+        with dsh.axis_rules(dsh.DEFAULT_RULES):
+            assert dsh.spec_for(("fsdp", "tp"), abstract_mesh) == \
+                P("data", "model")
+        with dsh.axis_rules(dsh.SERVE_RULES):
+            assert dsh.spec_for(("fsdp", "tp"), abstract_mesh) == \
+                P(None, ("data", "model"))
+
+    def test_innermost_context_wins_and_restores(self, abstract_mesh):
+        with dsh.axis_rules(dsh.DEFAULT_RULES):
+            with dsh.axis_rules(dsh.SERVE_RULES):
+                assert dsh.spec_for(("batch",), abstract_mesh) == P()
+            assert dsh.spec_for(("batch",), abstract_mesh) == P("data")
+
+    def test_default_outside_any_context(self, abstract_mesh):
+        assert dsh.current_rules() == dsh.DEFAULT_RULES
+        assert dsh.spec_for(("batch",), abstract_mesh) == P("data")
+
+    def test_multipod_rules_span_pod_axis(self):
+        mesh = jax.sharding.AbstractMesh((2, 2, 2),
+                                         ("pod", "data", "model"))
+        with dsh.axis_rules(dsh.MULTIPOD_RULES):
+            assert dsh.spec_for(("batch", "seq"), mesh) == \
+                P(("pod", "data"), "model")
+        with dsh.axis_rules(dsh.MULTIPOD_SERVE_RULES):
+            # cache: batch over pod x data, seq over model; kv_heads would
+            # reuse "data"+"model" and degrades to replication
+            assert dsh.spec_for(("cache_batch", "seq", "kv_heads", None),
+                                mesh) == P(("pod", "data"), "model")
+
+    def test_multipod_rules_degrade_on_single_pod_mesh(self, abstract_mesh):
+        # no "pod" axis on this mesh: the rule's surviving axes still apply
+        with dsh.axis_rules(dsh.MULTIPOD_RULES):
+            assert dsh.spec_for(("batch",), abstract_mesh) == P("data")
+
+    def test_first_match_wins_for_overrides(self, abstract_mesh):
+        rules = (("batch", "model"),) + dsh.DEFAULT_RULES
+        with dsh.axis_rules(rules):
+            assert dsh.spec_for(("batch",), abstract_mesh) == P("model")

@@ -1,0 +1,92 @@
+"""Exact-vs-reference contract for RaellaLinear (paper Table 1 / §5.1).
+
+With analog noise off and a non-saturating ADC, the full accelerator
+simulation (Center+Offset encoding, sliced crossbars, speculation,
+signed two-pass) must reproduce the ideal 8b-quantized layer *bit
+exactly* — the entire datapath is then pure integer arithmetic with a
+lossless converter. The fast TPU path uses a different (centered,
+per-channel asymmetric) quantizer, so it matches within the combined
+dequantization step of the two quantizers, not bit-exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc as adc_lib
+from repro.core import pim_linear as pl
+
+# 24-bit signed range holds any 8b x 8b x 1024-row column sum: the ADC
+# converts losslessly and never saturates
+WIDE_ADC = adc_lib.ADCConfig(bits=24, signed=True)
+
+ROWS, COLS, BATCH = 96, 10, 5
+
+
+def _layer(signed: bool, seed: int = 42):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.08, size=(ROWS, COLS)), jnp.float32)
+    xs = rng.normal(0.2, 0.4, size=(BATCH, ROWS))
+    if not signed:
+        xs = np.maximum(xs, 0)
+    return w, jnp.asarray(xs, jnp.float32)
+
+
+@pytest.mark.parametrize("speculation", [False, True],
+                         ids=["static", "speculative"])
+@pytest.mark.parametrize("signed", [False, True],
+                         ids=["unsigned", "signed"])
+class TestExactEqualsReference:
+    def test_bit_exact_at_zero_noise(self, speculation, signed):
+        w, x = _layer(signed)
+        plan = pl.prepare(w, x, weight_slicing=(4, 2, 2), adc=WIDE_ADC,
+                          speculation=speculation)
+        assert plan.lq.x_signed == signed
+        y = pl.forward_exact(x, plan, noise_level=0.0)
+        y_ref = pl.forward_int_reference(x, plan)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+    def test_fast_within_dequant_tolerance(self, speculation, signed):
+        w, x = _layer(signed)
+        plan = pl.prepare(w, x, weight_slicing=(4, 2, 2), adc=WIDE_ADC,
+                          speculation=speculation)
+        y_fast = np.asarray(pl.forward_fast(x, plan))
+        y_ref = np.asarray(pl.forward_int_reference(x, plan))
+        # worst-case combined rounding of the two weight quantizers:
+        # every row contributes at most |x|_max * (step_sym + step_cen) / 2
+        step = np.asarray(plan.lq.w_scale) + np.asarray(plan.fast_scale)
+        bound = ROWS * float(jnp.abs(x).max()) * step / 2
+        assert (np.abs(y_fast - y_ref) <= bound[None, :]).all()
+        # and both stay close to the float layer
+        y_float = np.asarray(x @ w)
+        rel = np.linalg.norm(y_fast - y_float) / np.linalg.norm(y_float)
+        assert rel < 0.03
+
+
+class TestNoiseAndSaturationBreakExactness:
+    """Negative controls: the bit-exact claim is specific to noise-free,
+    non-saturating conditions."""
+
+    def test_narrow_adc_saturates_away_from_reference(self):
+        rng = np.random.default_rng(7)
+        # skewed weights + zero-offset encoding (the differential baseline
+        # RAELLA replaces): column sums overflow the 7b ADC
+        w = jnp.asarray(rng.normal(-0.3, 0.15, size=(512, 8)), jnp.float32)
+        x = jnp.asarray(np.maximum(rng.normal(0.4, 0.4, size=(5, 512)), 0),
+                        jnp.float32)
+        plan = pl.prepare(w, x, weight_slicing=(4, 2, 2),
+                          adc=adc_lib.RAELLA_ADC, speculation=False,
+                          encode_mode="zero")
+        y = pl.forward_exact(x, plan, noise_level=0.0)
+        y_ref = pl.forward_int_reference(x, plan)
+        assert np.abs(np.asarray(y) - np.asarray(y_ref)).max() > 0
+
+    def test_noise_perturbs_output(self):
+        import jax
+        w, x = _layer(signed=False, seed=8)
+        plan = pl.prepare(w, x, weight_slicing=(4, 2, 2), adc=WIDE_ADC,
+                          speculation=False)
+        y0 = pl.forward_exact(x, plan, noise_level=0.0)
+        y1 = pl.forward_exact(x, plan, noise_level=0.5,
+                              key=jax.random.key(0))
+        assert np.abs(np.asarray(y1) - np.asarray(y0)).max() > 0
