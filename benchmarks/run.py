@@ -20,7 +20,8 @@ def _row(name, fn, derive):
 def main() -> None:
     from benchmarks import (fig3_column_sums, fig12_efficiency, fig13_retrain,
                             fig14_ablation, fig15_noise, lm_on_pim, roofline,
-                            table1_slicing, table2_titanium, table4_accuracy)
+                            serve_continuous, table1_slicing, table2_titanium,
+                            table4_accuracy)
     print("name,us_per_call,derived")
     _row("table1_slicing", table1_slicing.run,
          lambda o: f"bits/MAC x converts/MAC tradeoff over {len(o)} slicings")
@@ -60,6 +61,11 @@ def main() -> None:
     _row("roofline", roofline.run,
          lambda o: f"{o.get('cells', 0)} cells, "
                    f"bottlenecks {o.get('bottleneck_histogram')}")
+    _row("serve_continuous", serve_continuous.run,
+         lambda o: f"decode util {o['lockstep_util']:.2f} -> "
+                   f"{o['continuous_util']:.2f} "
+                   f"({o['util_ratio']:.2f}x, floor 1.5x), bit-identical="
+                   f"{o['bit_identical']}")
 
 
 if __name__ == "__main__":

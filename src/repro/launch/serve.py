@@ -1,16 +1,20 @@
-"""Serving launcher: batched generation demo.
+"""Serving launcher: continuous-batching generation demo.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-      --batch 4 --steps 16 [--pim fast]
+      --requests 8 --engine continuous [--pim fast]
 
-``--pim fast`` routes weight-static projections through the centered int8
-path (Eq. 1 on the MXU) — see examples/serve_quantized.py for the
+``--engine continuous`` (default) drives the slot-based scheduler on a
+mixed-length request trace and reports decode-step utilization next to
+throughput; ``--engine lockstep`` runs the fixed-batch reference engine.
+``--pim fast`` routes weight-static projections through the centered
+int8 path (Eq. 1 on the MXU) — see examples/serve_quantized.py for the
 end-to-end accuracy comparison.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,34 +22,81 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve.engine import ServeEngine
+from repro.serve import ContinuousServeEngine, Request, ServeEngine
+
+
+def build_trace(n: int, *, prompt_len: int, steps: int, vocab: int,
+                seed: int = 1) -> list[Request]:
+    """Mixed-length trace: prompt lengths in [prompt_len/2, prompt_len],
+    output lengths in [steps/4, steps] — the raggedness a lockstep batch
+    pads away."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(max(1, steps // 4), steps + 1))))
+    return reqs
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("continuous", "lockstep"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="trace length (continuous) / batch size (lockstep)")
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--pim", choices=("off", "fast", "exact"), default="off")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.pim != cfg.pim_mode:
+        cfg = dataclasses.replace(cfg, pim_mode=args.pim)
     params, _ = T.init_params(cfg, jax.random.key(0))
-    eng = ServeEngine(cfg, params,
-                      max_len=args.prompt_len + args.steps + 1,
-                      temperature=args.temperature)
-    prompts = np.asarray(jax.random.randint(
-        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size))
+    max_len = args.prompt_len + args.steps + 1
+
+    if args.engine == "lockstep":
+        eng = ServeEngine(cfg, params, max_len=max_len,
+                          temperature=args.temperature)
+        prompts = np.asarray(jax.random.randint(
+            jax.random.key(1), (args.requests, args.prompt_len), 0,
+            cfg.vocab_size))
+        t0 = time.monotonic()
+        res = eng.generate(prompts, steps=args.steps)
+        dt = time.monotonic() - t0
+        print(f"{cfg.name} lockstep: generated {res.tokens.shape} in "
+              f"{dt:.2f}s ({args.requests * args.steps / dt:.1f} tok/s)")
+        print(res.tokens[:2])
+        return
+
+    trace = build_trace(args.requests, prompt_len=args.prompt_len,
+                        steps=args.steps, vocab=cfg.vocab_size)
+    for i, r in enumerate(trace):
+        trace[i] = dataclasses.replace(r, temperature=args.temperature)
+    eng = ContinuousServeEngine(cfg, params, n_slots=args.slots,
+                                max_len=max_len,
+                                prefill_chunk=args.prefill_chunk)
     t0 = time.monotonic()
-    res = eng.generate(prompts, steps=args.steps)
+    outs = eng.run(trace)
     dt = time.monotonic() - t0
-    print(f"{cfg.name}: generated {res.tokens.shape} in {dt:.2f}s "
-          f"({args.batch * args.steps / dt:.1f} tok/s)")
-    print(res.tokens[:2])
+    total = sum(len(o.tokens) for o in outs)
+    st = eng.stats
+    print(f"{cfg.name} continuous: {len(outs)} requests, {total} tokens in "
+          f"{dt:.2f}s ({total / dt:.1f} tok/s)")
+    print(f"decode utilization {st.decode_utilization:.2f} tokens/step over "
+          f"{args.slots} slots ({st.decode_steps} decode steps, "
+          f"{st.prefill_chunks} prefill chunks)")
+    print("first outputs:", {o.uid: o.tokens[:8].tolist() for o in outs[:2]})
 
 
 if __name__ == "__main__":

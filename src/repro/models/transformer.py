@@ -208,8 +208,15 @@ def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
 
 
 # ------------------------------------------------------------------ decode
-def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> dict:
-    """Stacked per-repeat caches for every pattern position."""
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
+                      per_slot_pos: bool = False) -> dict:
+    """Stacked per-repeat caches for every pattern position.
+
+    With ``per_slot_pos`` the state carries one position per batch slot
+    (shape ``(batch,)``) instead of a single scalar, so each slot can sit
+    at a different sequence offset — the substrate for continuous
+    batching (see ``repro.serve.scheduler``).
+    """
     hd = cfg.resolved_head_dim
     kv_dt = jnp.dtype(cfg.kv_cache_dtype)
     caches = []
@@ -239,7 +246,8 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> dict:
                 lambda a: jnp.broadcast_to(a[None],
                                            (cfg.n_repeats,) + a.shape).copy(), one)
         caches.append(c)
-    return {"caches": caches, "pos": jnp.zeros((), jnp.int32)}
+    pos = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
+    return {"caches": caches, "pos": pos}
 
 
 def cache_specs(cfg: ArchConfig) -> dict:
@@ -263,6 +271,23 @@ def cache_specs(cfg: ArchConfig) -> dict:
     return {"caches": caches, "pos": ()}
 
 
+def _write_token(buf: jnp.ndarray, new: jnp.ndarray,
+                 pos: jnp.ndarray) -> jnp.ndarray:
+    """Write a one-token slice ``new`` (B, 1, ...) into a (B, L, ...) cache.
+
+    Scalar ``pos`` keeps the lockstep dynamic-update path; a ``(B,)`` pos
+    scatters each slot's row at its own offset (``mode="drop"``:
+    out-of-range per-slot positions write nothing, so retired/idle slots
+    are no-ops).
+    """
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), pos, axis=1)
+    B = buf.shape[0]
+    return buf.at[jnp.arange(B), pos].set(new[:, 0].astype(buf.dtype),
+                                          mode="drop")
+
+
 def _quantize_kv(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(..., hd) -> int8 codes + per-(token, head) fp32 scale (RAELLA-style
     low-precision storage with a digital correction factor)."""
@@ -279,9 +304,17 @@ def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
                  pos: jnp.ndarray) -> tuple[dict, jnp.ndarray]:
-    """Single-token attention against the (sequence-sharded) KV cache."""
+    """Single-token attention against the (sequence-sharded) KV cache.
+
+    ``pos`` is a scalar (lockstep: the whole batch shares one position) or
+    a ``(B,)`` vector (continuous batching: one position per slot).
+    """
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    else:
+        positions = pos[:, None]
     q, k_new, v_new = L.qkv_project(bp["core"], cfg, x, positions)
     # align the query/new-KV batch with the cache's batch sharding so the
     # whole attention stays device-local (otherwise the dequantized cache
@@ -294,20 +327,16 @@ def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, 1),
-            "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], ks, pos, 1),
-            "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], vs, pos, 1),
+            "k": _write_token(cache["k"], kq, pos),
+            "v": _write_token(cache["v"], vq, pos),
+            "k_scale": _write_token(cache["k_scale"], ks, pos),
+            "v_scale": _write_token(cache["v_scale"], vs, pos),
         }
         k_cache = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
         v_cache = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos,
-                                                      axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos,
-                                                      axis=1)
+        k_cache = _write_token(cache["k"], k_new, pos)
+        v_cache = _write_token(cache["v"], v_new, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     out = L.chunked_attention(q, k_cache, v_cache, q_positions=positions,
                               kv_len=pos + 1, causal=True)
@@ -339,7 +368,11 @@ def _decode_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
 
 def decode_step(params: dict, cfg: ArchConfig, state: dict,
                 tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
-    """One decode step. tokens: (B, 1) ids or (B, 1, D) embeds."""
+    """One decode step. tokens: (B, 1) ids or (B, 1, D) embeds.
+
+    ``state["pos"]`` may be a scalar (lockstep) or ``(B,)`` (per-slot,
+    continuous batching); every slot's position advances by one.
+    """
     x = embed_inputs(params, cfg, tokens)
     pos = state["pos"]
 
@@ -362,93 +395,201 @@ def decode_step(params: dict, cfg: ArchConfig, state: dict,
 
 
 # ------------------------------------------------------------------ prefill
-def prefill(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
-            max_len: int | None = None) -> tuple[jnp.ndarray, dict]:
-    """Process a prompt, returning last-position logits + a filled decode
-    state. Cache buffers sized to max_len (default: prompt length)."""
-    x = embed_inputs(params, cfg, inputs)
-    B, Seq = x.shape[0], x.shape[1]
-    max_len = max_len or Seq
-    positions = jnp.broadcast_to(jnp.arange(Seq, dtype=jnp.int32), (B, Seq))
-    hd = cfg.resolved_head_dim
+def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
+                         positions: jnp.ndarray, pos0: jnp.ndarray,
+                         kv_len: jnp.ndarray, raw_attn: bool):
+    """Shared per-repeat body for whole-prompt and chunked prefill.
 
-    def repeat_body(carry, rep_params):
+    Consumes ``(rep_params, rep_caches)`` and writes the processed chunk
+    into the caches at ``pos0``. ``raw_attn`` selects where attention
+    reads K/V from: this call's raw projections (whole-prompt prefill —
+    also the encoder path, honoring ``cfg.causal``) or the cache buffer
+    (chunked continuation: earlier chunks are only available there).
+    The recurrent mamba/rwkv branches continue from the cached carries
+    either way — a zero-initialized state makes them identical to a
+    fresh forward.
+    """
+    int8_cache = jnp.dtype(cfg.kv_cache_dtype) == jnp.int8
+
+    def repeat_body(carry, xs):
         h = carry
-        caches = []
+        rep_params, rep_caches = xs
+        new_caches = []
         for i, kind in enumerate(cfg.block_pattern):
-            bp = rep_params[i]
+            bp, cache = rep_params[i], rep_caches[i]
             hn = L.rmsnorm(bp["norm1"], h, cfg.norm_eps)
             if kind == "attn":
                 q, k, v = L.qkv_project(bp["core"], cfg, hn, positions)
-                q = shard(q, "batch", "seq", None, None)
-                o = L.chunked_attention(q, k, v, q_positions=positions,
-                                        kv_len=Seq, causal=cfg.causal)
-                core_out = jnp.einsum("bse,ed->bsd", o.reshape(B, Seq, -1),
-                                      bp["core"]["wo"])
-                pad = max_len - Seq
-                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                kc = shard(kc, "cache_batch", "seq", "kv_heads", None)
-                vc = shard(vc, "cache_batch", "seq", "kv_heads", None)
-                if jnp.dtype(cfg.kv_cache_dtype) == jnp.int8:
-                    kq, ks = _quantize_kv(kc)
-                    vq, vs = _quantize_kv(vc)
-                    cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+                if int8_cache:
+                    kq, ks = _quantize_kv(k)
+                    vq, vs = _quantize_kv(v)
+                    cache = {
+                        "k": jax.lax.dynamic_update_slice_in_dim(
+                            cache["k"], kq, pos0, axis=1),
+                        "v": jax.lax.dynamic_update_slice_in_dim(
+                            cache["v"], vq, pos0, axis=1),
+                        "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                            cache["k_scale"], ks, pos0, axis=1),
+                        "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                            cache["v_scale"], vs, pos0, axis=1),
+                    }
                 else:
-                    cache = {"k": kc, "v": vc}
+                    cache = {
+                        "k": jax.lax.dynamic_update_slice_in_dim(
+                            cache["k"], k.astype(cache["k"].dtype), pos0,
+                            axis=1),
+                        "v": jax.lax.dynamic_update_slice_in_dim(
+                            cache["v"], v.astype(cache["v"].dtype), pos0,
+                            axis=1),
+                    }
+                cache["k"] = shard(cache["k"], "cache_batch", "seq",
+                                   "kv_heads", None)
+                cache["v"] = shard(cache["v"], "cache_batch", "seq",
+                                   "kv_heads", None)
+                if raw_attn:
+                    q = shard(q, "batch", "seq", None, None)
+                    o = L.chunked_attention(q, k, v, q_positions=positions,
+                                            kv_len=kv_len,
+                                            causal=cfg.causal)
+                else:
+                    q = shard(q, "cache_batch", None, None, None)
+                    if int8_cache:
+                        k_all = _dequantize_kv(cache["k"], cache["k_scale"],
+                                               hn.dtype)
+                        v_all = _dequantize_kv(cache["v"], cache["v_scale"],
+                                               hn.dtype)
+                    else:
+                        k_all = cache["k"].astype(hn.dtype)
+                        v_all = cache["v"].astype(hn.dtype)
+                    o = L.chunked_attention(q, k_all, v_all,
+                                            q_positions=positions,
+                                            kv_len=kv_len, causal=True)
+                core_out = jnp.einsum("bse,ed->bsd", o.reshape(B, C, -1),
+                                      bp["core"]["wo"])
             elif kind == "mamba":
-                xc, z, dtf, bm, cm, conv_state = S._mamba_preprocess(
-                    bp["core"], cfg, hn)
-                di, dtr, ds, conv = S.mamba_dims(cfg)
+                xc, z, dtf, bm, cm, new_conv = S._mamba_preprocess(
+                    bp["core"], cfg, hn, conv_state=cache["conv"])
 
                 def step(hh, xs_t):
                     xt, bt, ct, dtt = xs_t
                     return S._mamba_step(bp["core"], cfg, hh, xt, bt, ct, dtt)
 
-                h0 = jnp.zeros((B, di, ds), jnp.float32)
-                xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xc, bm, cm, dtf))
-                h_fin, ys = S._chunked_scan(step, h0, xs, S.SCAN_CHUNK,
-                                            cfg.remat)
+                xs_seq = tuple(jnp.moveaxis(a, 1, 0)
+                               for a in (xc, bm, cm, dtf))
+                h_fin, ys = S._chunked_scan(step, cache["h"], xs_seq,
+                                            S.SCAN_CHUNK, cfg.remat)
                 y = jnp.moveaxis(ys, 0, 1).astype(hn.dtype) * jax.nn.silu(z)
                 core_out = jnp.einsum("bse,ed->bsd", y, bp["core"]["out_proj"])
-                cache = {"h": h_fin, "conv": conv_state[:, -(conv - 1):]
-                         if conv > 1 else conv_state[:, :0]}
+                cache = {"h": h_fin, "conv": new_conv}
             else:  # rwkv
                 x_prev = jnp.concatenate(
-                    [jnp.zeros_like(hn[:, :1]), hn[:, :-1]], axis=1)
-                rh, kh, vh, wh, g = S._rwkv_project(bp["core"], cfg, hn, x_prev)
-                H, hdim = S.rwkv_dims(cfg)
+                    [cache["x_prev"][:, None].astype(hn.dtype), hn[:, :-1]],
+                    axis=1)
+                rh, kh, vh, wh, g = S._rwkv_project(bp["core"], cfg, hn,
+                                                    x_prev)
 
                 def step(hh, xs_t):
                     rt, kt, vt, wt = xs_t
                     return S._rwkv_step(bp["core"], hh, rt, kt, vt, wt)
 
-                h0 = jnp.zeros((B, H, hdim, hdim), jnp.float32)
-                xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
-                h_fin, ys = S._chunked_scan(step, h0, xs, S.SCAN_CHUNK,
-                                            cfg.remat)
+                xs_seq = tuple(jnp.moveaxis(a, 1, 0)
+                               for a in (rh, kh, vh, wh))
+                h_fin, ys = S._chunked_scan(step, cache["h"], xs_seq,
+                                            S.SCAN_CHUNK, cfg.remat)
                 y = jnp.moveaxis(ys, 0, 1).reshape(hn.shape).astype(hn.dtype)
                 y = y * jax.lax.rsqrt(
                     jnp.mean(jnp.square(y), -1, keepdims=True) + cfg.norm_eps)
                 y = y * bp["core"]["ln_x"] * jax.nn.silu(g)
                 core_out = jnp.einsum("bsd,de->bse", y, bp["core"]["wo"])
+                cm_prev_in = cache["cm_prev"]
                 cache = {"h": h_fin, "x_prev": hn[:, -1]}
             h = h + core_out
             hn2 = L.rmsnorm(bp["norm2"], h, cfg.norm_eps)
             if kind == "rwkv":
-                ffn_out = S.rwkv_channel_mix(bp["ffn"], cfg, hn2)
+                cm_hist = jnp.concatenate(
+                    [cm_prev_in[:, None].astype(hn2.dtype), hn2[:, :-1]],
+                    axis=1)
+                ffn_out = S.rwkv_channel_mix(bp["ffn"], cfg, hn2,
+                                             x_prev=cm_hist)
                 cache["cm_prev"] = hn2[:, -1]
             elif cfg.moe_layer(i):
                 ffn_out = L.moe_block(bp["ffn"], cfg, hn2)
             else:
                 ffn_out = L.mlp_block(bp["ffn"], cfg, hn2)
             h = shard(h + ffn_out, "batch", "seq", None)
-            caches.append(cache)
-        return h, tuple(caches)
+            new_caches.append(cache)
+        return h, tuple(new_caches)
 
-    body = jax.checkpoint(repeat_body) if cfg.remat else repeat_body
-    x, caches = jax.lax.scan(body, x, tuple(params["blocks"]))
+    return repeat_body
+
+
+def _run_prefill_body(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+                      caches, body) -> tuple[jnp.ndarray, list]:
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, new_caches = jax.lax.scan(
+        body, x, (tuple(params["blocks"]), tuple(caches)))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.lm_head(params["embed"], cfg, x[:, -1:])
-    state = {"caches": list(caches), "pos": jnp.asarray(Seq, jnp.int32)}
-    return logits, state
+    return L.lm_head(params["embed"], cfg, x[:, -1:]), list(new_caches)
+
+
+def prefill(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
+            max_len: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """Process a prompt, returning last-position logits + a filled decode
+    state. Cache buffers sized to max_len (default: prompt length).
+    Attention runs over this call's raw K/V (``causal=cfg.causal``, so
+    encoder-only archs work too); K/V are then stored into the cache."""
+    x = embed_inputs(params, cfg, inputs)
+    B, Seq = x.shape[0], x.shape[1]
+    max_len = max_len or Seq
+    state = init_decode_state(cfg, B, max_len)
+    positions = jnp.broadcast_to(jnp.arange(Seq, dtype=jnp.int32), (B, Seq))
+    body = _prefill_repeat_body(cfg, B, Seq, positions,
+                                pos0=jnp.zeros((), jnp.int32),
+                                kv_len=Seq, raw_attn=True)
+    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body)
+    return logits, {"caches": caches, "pos": jnp.asarray(Seq, jnp.int32)}
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, state: dict,
+                  tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """Process the next prompt chunk of an in-flight (chunked) prefill.
+
+    ``state`` is a scalar-pos decode state whose caches hold positions
+    ``[0, state["pos"])``; ``tokens`` (B, C) ids — or (B, C, D) embeds —
+    continue the prompt at that offset. Returns last-position logits and
+    the advanced state, exactly like ``prefill``.
+
+    ``init_decode_state`` followed by ``prefill_chunk`` over the whole
+    prompt reproduces ``prefill`` bit-for-bit for float KV caches (the
+    recurrent mamba/rwkv states continue their scans from the cached
+    carry; attention reads earlier chunks back out of the cache, which is
+    value-preserving when the cache dtype holds K/V exactly). With an
+    int8 KV cache each chunk boundary inserts one quantize/dequantize
+    round-trip that whole-prompt ``prefill`` does not have.
+    """
+    x = embed_inputs(params, cfg, tokens)
+    B, C = x.shape[0], x.shape[1]
+    pos0 = jnp.asarray(state["pos"], jnp.int32)
+    positions = jnp.broadcast_to(pos0 + jnp.arange(C, dtype=jnp.int32),
+                                 (B, C))
+    body = _prefill_repeat_body(cfg, B, C, positions, pos0=pos0,
+                                kv_len=pos0 + C, raw_attn=False)
+    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body)
+    return logits, {"caches": caches, "pos": pos0 + C}
+
+
+def insert_request(state: dict, one: dict, slot: jnp.ndarray) -> dict:
+    """Splice a batch-1 decode state into slot ``slot`` of a batched state.
+
+    ``state`` must carry per-slot positions (``init_decode_state(...,
+    per_slot_pos=True)``); ``one`` is a scalar-pos state produced by
+    ``prefill``/``prefill_chunk`` at batch 1. Every cache leaf is written
+    along the batch axis (axis 1 — leaves are stacked per repeat), so the
+    slot's previous contents are fully replaced.
+    """
+    caches = jax.tree.map(
+        lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+            c, o.astype(c.dtype), slot, axis=1),
+        state["caches"], one["caches"])
+    pos = state["pos"].at[slot].set(jnp.asarray(one["pos"], jnp.int32))
+    return {"caches": caches, "pos": pos}

@@ -1,1 +1,18 @@
+"""Serving layer: lockstep reference engine + continuous-batching engine."""
+
 from repro.serve.engine import GenerationResult, ServeEngine  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousServeEngine,
+    EngineStats,
+    Request,
+    RequestOutput,
+)
+
+__all__ = [
+    "ContinuousServeEngine",
+    "EngineStats",
+    "GenerationResult",
+    "Request",
+    "RequestOutput",
+    "ServeEngine",
+]

@@ -43,27 +43,36 @@ class ServeEngine:
 
     def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
-        if self.temperature <= 0.0:
+        if key is None:
             return jnp.argmax(logits, axis=-1)[:, None]
         return jax.random.categorical(
             key, logits / self.temperature, axis=-1)[:, None]
 
     def generate(self, prompts: np.ndarray, *, steps: int,
                  seed: int = 0) -> GenerationResult:
-        """prompts: (B, prompt_len) int32 token ids."""
+        """prompts: (B, prompt_len) int32 token ids.
+
+        Seed reproducibility: at ``temperature == 0`` no PRNG key is ever
+        created, split, or consumed — greedy outputs are deterministic and
+        independent of ``seed``. At ``temperature > 0`` the stream is
+        ``jax.random.key(seed)`` for the first token and
+        ``fold_in(key(seed), i)`` for decode step ``i``, so a fixed seed
+        replays the exact sample sequence (the continuous-batching engine
+        uses the same per-request scheme — see repro.serve.scheduler).
+        """
         toks = jnp.asarray(prompts, jnp.int32)
         B, plen = toks.shape
         if plen + steps > self.max_len:
             raise ValueError("prompt + steps exceeds engine max_len")
-        key = jax.random.key(seed)
+        key = None if self.temperature <= 0.0 else jax.random.key(seed)
         logits, state = self._prefill(self.params, toks)
         out = []
         tok = self._pick(logits, key)
         out.append(tok)
         for i in range(steps - 1):
-            key = jax.random.fold_in(key, i)
+            step_key = None if key is None else jax.random.fold_in(key, i)
             logits, state = self._decode(self.params, state, tok)
-            tok = self._pick(logits, key)
+            tok = self._pick(logits, step_key)
             out.append(tok)
         gen = np.asarray(jnp.concatenate(out, axis=1))
         return GenerationResult(tokens=gen, prompt_len=plen, steps=steps)
