@@ -18,24 +18,26 @@ from repro.core import adc as adc_lib
 NOISE_LEVELS = (0.0, 0.04, 0.08, 0.12)
 
 
-def run() -> dict:
-    mlp, ds = trained_mlp()
-    out = {"float_reference": mlp_accuracy(mlp, ds)}
+def run(noise_levels: tuple = NOISE_LEVELS, eval_n: int = 2048,
+        train_steps: int = 1500) -> dict:
+    mlp, ds = trained_mlp(steps=train_steps)
+    out = {"float_reference": mlp_accuracy(mlp, ds, n=eval_n)}
     isaac_adc = adc_lib.ADCConfig(bits=8, signed=False)
 
-    for level in NOISE_LEVELS:
+    for level in noise_levels:
         row = {}
         # ISAAC: unsigned arithmetic, 128-row crossbars, 8b unsigned ADC
         layer = pim_layer_fn(mlp, ds, encode_mode="unsigned",
                              weight_slicing=(2, 2, 2, 2), adc=isaac_adc,
                              speculation=False, noise_level=level,
                              rows_per_xbar=128)
-        row["isaac"] = mlp_accuracy(mlp, ds, layer_fn=layer)
+        row["isaac"] = mlp_accuracy(mlp, ds, n=eval_n, layer_fn=layer)
         # + Center+Offset: 512-row 2T2R, 7b signed ADC
         layer = pim_layer_fn(mlp, ds, encode_mode="center",
                              weight_slicing=(2, 2, 2, 2),
                              speculation=False, noise_level=level)
-        row["center_offset"] = mlp_accuracy(mlp, ds, layer_fn=layer)
+        row["center_offset"] = mlp_accuracy(mlp, ds, n=eval_n,
+                                           layer_fn=layer)
         # + Adaptive Weight Slicing (noise-aware choice on layer 1)
         x_cal, _ = ds.batch(77, 10)
         choice = adaptive.find_best_slicing(
@@ -43,13 +45,13 @@ def run() -> dict:
         layer = pim_layer_fn(mlp, ds, encode_mode="center",
                              weight_slicing=choice.slicing,
                              speculation=False, noise_level=level)
-        row["adaptive"] = mlp_accuracy(mlp, ds, layer_fn=layer)
+        row["adaptive"] = mlp_accuracy(mlp, ds, n=eval_n, layer_fn=layer)
         row["adaptive_n_slices"] = choice.n_slices
         # full RAELLA (speculation + recovery)
         layer = pim_layer_fn(mlp, ds, encode_mode="center",
                              weight_slicing=choice.slicing,
                              speculation=True, noise_level=level)
-        row["raella"] = mlp_accuracy(mlp, ds, layer_fn=layer)
+        row["raella"] = mlp_accuracy(mlp, ds, n=eval_n, layer_fn=layer)
         out[f"noise_{level:.2f}"] = row
     return out
 

@@ -1,12 +1,102 @@
-"""Benchmark runner: one function per paper table/figure.
+"""Benchmark runner: one registry entry per paper table/figure + system
+benchmark.
 
 Prints ``name,us_per_call,derived`` CSV (derived = the headline metric of
-that artifact).
+that artifact). ``REGISTRY`` is the canonical list of runnable entries —
+``tests/test_benchmarks_smoke.py`` executes every entry at its
+``smoke_kwargs`` toy sizes and asserts JSON-serializable output.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import importlib
 import time
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One benchmark: a ``benchmarks.<module>.run`` plus its headline
+    formatter and the kwargs that shrink it to smoke-test size."""
+    module: str
+    derive: Callable[[object], str]
+    smoke_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def run(self, **kwargs):
+        return importlib.import_module(f"benchmarks.{self.module}").run(
+            **kwargs)
+
+
+REGISTRY: dict[str, Entry] = {
+    "table1_slicing": Entry(
+        "table1_slicing",
+        lambda o: f"bits/MAC x converts/MAC tradeoff over {len(o)} slicings"),
+    "table2_titanium": Entry(
+        "table2_titanium",
+        lambda o: "law_matches=" + str(all(v["law_matches"]
+                                          for v in o.values()))),
+    "fig3_column_sums": Entry(
+        "fig3_column_sums",
+        lambda o: "le7b: " + " -> ".join(
+            f"{o[k]['le7b']:.2f}" for k in
+            ["baseline_unsigned_4b", "center_offset", "adaptive_slicing",
+             "recovery_cycles"])),
+    "fig12_efficiency": Entry(
+        "fig12_efficiency",
+        lambda o: f"geomean eff {o['geomean']['efficiency_x']:.2f}x "
+                  f"thpt {o['geomean']['throughput_x']:.2f}x "
+                  f"(paper 3.9/2.0)"),
+    "fig13_retrain": Entry(
+        "fig13_retrain",
+        lambda o: f"RAELLA {o['raella_vs_isaac']['efficiency_x']:.2f}x vs "
+                  f"FORMS {o['forms8_vs_isaac']['efficiency_x']:.2f}x / "
+                  f"TIMELY {o['timely_vs_isaac']['efficiency_x']:.2f}x "
+                  f"(no retraining)"),
+    "fig14_ablation": Entry(
+        "fig14_ablation",
+        lambda o: "converts/MAC " + " -> ".join(
+            f"{v['ideal_converts_per_mac']:.3f}" for v in o.values())
+        + " (paper 0.25->0.063->0.047->0.018)"),
+    "table4_accuracy": Entry(
+        "table4_accuracy",
+        lambda o: f"sec4.2.1 err C+O {o['center']['sec4.2.1_error']} vs "
+                  f"Z+O {o['zero']['sec4.2.1_error']}; acc drop "
+                  f"{o['center']['accuracy_drop_pts']} vs "
+                  f"{o['zero']['accuracy_drop_pts']} pts",
+        smoke_kwargs=dict(train_steps=300, eval_n=256)),
+    "fig15_noise": Entry(
+        "fig15_noise",
+        lambda o: "acc@12% noise: " + " ".join(
+            f"{k}={v:.2f}" for k, v in o["noise_0.12"].items()
+            if isinstance(v, float)),
+        smoke_kwargs=dict(noise_levels=(0.12,), eval_n=512,
+                          train_steps=300)),
+    "lm_on_pim": Entry(
+        "lm_on_pim",
+        lambda o: f"assigned-LM zoo on RAELLA silicon: "
+                  f"{o['geomean_efficiency_x']}x geomean vs 8b-ISAAC",
+        smoke_kwargs=dict(tokens=128)),
+    "roofline": Entry(
+        "roofline",
+        lambda o: f"{o.get('cells', 0)} cells, "
+                  f"bottlenecks {o.get('bottleneck_histogram')}"),
+    "serve_continuous": Entry(
+        "serve_continuous",
+        lambda o: f"decode util {o['lockstep_util']:.2f} -> "
+                  f"{o['continuous_util']:.2f} "
+                  f"({o['util_ratio']:.2f}x, floor 1.5x), bit-identical="
+                  f"{o['bit_identical']}",
+        smoke_kwargs=dict(n_groups=1)),
+    "serve_pim": Entry(
+        "serve_pim",
+        lambda o: f"pim fast decode "
+                  f"{o['fast']['decode_tok_per_s']:.1f} tok/s vs off "
+                  f"{o['off']['decode_tok_per_s']:.1f} "
+                  f"({o['throughput_ratio_fast_over_off']}x), token "
+                  f"agreement {o['token_agreement']}",
+        smoke_kwargs=dict(requests=2, steps=4)),
+}
 
 
 def _row(name, fn, derive):
@@ -18,54 +108,9 @@ def _row(name, fn, derive):
 
 
 def main() -> None:
-    from benchmarks import (fig3_column_sums, fig12_efficiency, fig13_retrain,
-                            fig14_ablation, fig15_noise, lm_on_pim, roofline,
-                            serve_continuous, table1_slicing, table2_titanium,
-                            table4_accuracy)
     print("name,us_per_call,derived")
-    _row("table1_slicing", table1_slicing.run,
-         lambda o: f"bits/MAC x converts/MAC tradeoff over {len(o)} slicings")
-    _row("table2_titanium", table2_titanium.run,
-         lambda o: "law_matches=" + str(all(v["law_matches"]
-                                            for v in o.values())))
-    _row("fig3_column_sums", fig3_column_sums.run,
-         lambda o: "le7b: " + " -> ".join(
-             f"{o[k]['le7b']:.2f}" for k in
-             ["baseline_unsigned_4b", "center_offset", "adaptive_slicing",
-              "recovery_cycles"]))
-    _row("fig12_efficiency", fig12_efficiency.run,
-         lambda o: f"geomean eff {o['geomean']['efficiency_x']:.2f}x "
-                   f"thpt {o['geomean']['throughput_x']:.2f}x "
-                   f"(paper 3.9/2.0)")
-    _row("fig13_retrain", fig13_retrain.run,
-         lambda o: f"RAELLA {o['raella_vs_isaac']['efficiency_x']:.2f}x vs "
-                   f"FORMS {o['forms8_vs_isaac']['efficiency_x']:.2f}x / "
-                   f"TIMELY {o['timely_vs_isaac']['efficiency_x']:.2f}x "
-                   f"(no retraining)")
-    _row("fig14_ablation", fig14_ablation.run,
-         lambda o: "converts/MAC " + " -> ".join(
-             f"{v['ideal_converts_per_mac']:.3f}" for v in o.values())
-         + " (paper 0.25->0.063->0.047->0.018)")
-    _row("table4_accuracy", table4_accuracy.run,
-         lambda o: f"sec4.2.1 err C+O {o['center']['sec4.2.1_error']} vs "
-                   f"Z+O {o['zero']['sec4.2.1_error']}; acc drop "
-                   f"{o['center']['accuracy_drop_pts']} vs "
-                   f"{o['zero']['accuracy_drop_pts']} pts")
-    _row("fig15_noise", fig15_noise.run,
-         lambda o: "acc@12% noise: " + " ".join(
-             f"{k}={v:.2f}" for k, v in o["noise_0.12"].items()
-             if isinstance(v, float)))
-    _row("lm_on_pim", lm_on_pim.run,
-         lambda o: f"assigned-LM zoo on RAELLA silicon: "
-                   f"{o['geomean_efficiency_x']}x geomean vs 8b-ISAAC")
-    _row("roofline", roofline.run,
-         lambda o: f"{o.get('cells', 0)} cells, "
-                   f"bottlenecks {o.get('bottleneck_histogram')}")
-    _row("serve_continuous", serve_continuous.run,
-         lambda o: f"decode util {o['lockstep_util']:.2f} -> "
-                   f"{o['continuous_util']:.2f} "
-                   f"({o['util_ratio']:.2f}x, floor 1.5x), bit-identical="
-                   f"{o['bit_identical']}")
+    for name, entry in REGISTRY.items():
+        _row(name, entry.run, entry.derive)
 
 
 if __name__ == "__main__":

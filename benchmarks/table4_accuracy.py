@@ -32,9 +32,10 @@ PAPER = {  # (Center+Offset drop, Zero+Offset drop) from the paper's Table 4
 }
 
 
-def run() -> dict:
-    mlp, ds = trained_mlp(d_in=512, hidden=512, n_classes=8, steps=1500)
-    acc_f = mlp_accuracy(mlp, ds)
+def run(train_steps: int = 1500, eval_n: int = 2048) -> dict:
+    mlp, ds = trained_mlp(d_in=512, hidden=512, n_classes=8,
+                          steps=train_steps)
+    acc_f = mlp_accuracy(mlp, ds, n=eval_n)
     out = {"float_accuracy": acc_f}
     x_cal, _ = ds.batch(77, 10)
     for mode in ["center", "zero"]:
@@ -45,7 +46,7 @@ def run() -> dict:
         _, stats = plin.forward_exact(x_cal, plan, return_stats=True)
         st = stats[0]
         layer = pim_layer_fn(mlp, ds, encode_mode=mode, speculation=True)
-        acc = mlp_accuracy(mlp, ds, layer_fn=layer)
+        acc = mlp_accuracy(mlp, ds, n=eval_n, layer_fn=layer)
         out[mode] = {
             "sec4.2.1_error": round(err, 4),
             "under_budget_0.09": err < 0.09,

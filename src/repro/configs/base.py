@@ -46,8 +46,17 @@ class ArchConfig:
     kv_cache_dtype: str = "bfloat16"   # "int8": RAELLA-style low-precision
                                        # cache storage w/ digital scales
     # PIM integration: "off" (bf16), "fast" (centered int8 serving path),
-    # "exact" (bit-exact accelerator simulation; small models only)
+    # "exact" (bit-exact accelerator simulation; small models only),
+    # "int8" (ideal 8b-quantized reference — the dequant oracle the exact
+    # path must match bit-for-bit at noise 0 / non-saturating ADC).
+    # Consumed by repro.models (pim_matmul) and both serve engines; plans
+    # come from repro.models.pim.prepare_pim_params.
     pim_mode: str = "off"
+    pim_use_pallas: bool = False       # fast path: Pallas kernel vs XLA ref
+    pim_weight_slicing: tuple[int, ...] = (4, 2, 2)
+    pim_speculation: bool = True       # exact path: dynamic input slicing
+    pim_adc_bits: int = 24             # exact path ADC; 24b = lossless
+                                       # (contract default), 7 = paper ADC
 
     def __post_init__(self):
         if self.n_layers % len(self.block_pattern) != 0:

@@ -66,9 +66,16 @@ def prepare(w: jnp.ndarray,
             speculation: bool = True,
             encode_mode: str = "center",
             bias: jnp.ndarray | None = None,
-            relu_out: bool = False) -> PimPlan:
-    """Quantize + Center+Offset encode + slice a layer's weights."""
-    lq, w_q = q.calibrate_layer(w, x_cal, bias=bias, relu_out=relu_out)
+            relu_out: bool = False,
+            signed_inputs: bool | None = None) -> PimPlan:
+    """Quantize + Center+Offset encode + slice a layer's weights.
+
+    ``signed_inputs=None`` infers signedness from ``x_cal`` (requires
+    concrete values); the model compile step passes ``True`` explicitly —
+    transformer residual-stream activations are always signed.
+    """
+    lq, w_q = q.calibrate_layer(w, x_cal, bias=bias, relu_out=relu_out,
+                                signed_inputs=signed_inputs)
     w_u = np.asarray(w_q, np.int64) + 128
     enc = co.encode(w_u, weight_slicing, mode=encode_mode)
     w_off, centers, fscale = q.quantize_weights_centered(w)

@@ -6,9 +6,12 @@
 ``--engine continuous`` (default) drives the slot-based scheduler on a
 mixed-length request trace and reports decode-step utilization next to
 throughput; ``--engine lockstep`` runs the fixed-batch reference engine.
-``--pim fast`` routes weight-static projections through the centered
-int8 path (Eq. 1 on the MXU) — see examples/serve_quantized.py for the
-end-to-end accuracy comparison.
+``--pim fast`` compiles the params with
+``repro.models.pim.prepare_pim_params`` (on a random calibration batch)
+and routes every weight-static projection through the centered int8 path
+(Eq. 1 on the MXU); ``--pim exact`` runs the bit-exact accelerator
+simulation, ``--pim int8`` the ideal 8b-quantized reference — see
+``benchmarks/serve_pim.py`` for the throughput comparison.
 """
 
 from __future__ import annotations
@@ -21,6 +24,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.models import pim
 from repro.models import transformer as T
 from repro.serve import ContinuousServeEngine, Request, ServeEngine
 
@@ -54,7 +58,8 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--pim", choices=("off", "fast", "exact"), default="off")
+    ap.add_argument("--pim", choices=("off", "fast", "exact", "int8"),
+                    default="off")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -65,9 +70,19 @@ def main() -> None:
     params, _ = T.init_params(cfg, jax.random.key(0))
     max_len = args.prompt_len + args.steps + 1
 
+    plans = None
+    if cfg.pim_mode != "off":
+        calib = np.asarray(jax.random.randint(
+            jax.random.key(7), (2, max(args.prompt_len, 4)), 0,
+            cfg.vocab_size))
+        t0 = time.monotonic()
+        plans, _ = pim.prepare_pim_params(params, cfg, calib)
+        print(f"compiled pim plans ({cfg.pim_mode}) in "
+              f"{time.monotonic() - t0:.2f}s")
+
     if args.engine == "lockstep":
         eng = ServeEngine(cfg, params, max_len=max_len,
-                          temperature=args.temperature)
+                          temperature=args.temperature, plans=plans)
         prompts = np.asarray(jax.random.randint(
             jax.random.key(1), (args.requests, args.prompt_len), 0,
             cfg.vocab_size))
@@ -85,7 +100,8 @@ def main() -> None:
         trace[i] = dataclasses.replace(r, temperature=args.temperature)
     eng = ContinuousServeEngine(cfg, params, n_slots=args.slots,
                                 max_len=max_len,
-                                prefill_chunk=args.prefill_chunk)
+                                prefill_chunk=args.prefill_chunk,
+                                plans=plans)
     t0 = time.monotonic()
     outs = eng.run(trace)
     dt = time.monotonic() - t0

@@ -1,4 +1,4 @@
-from repro.models import layers, ssm, transformer  # noqa: F401
+from repro.models import layers, pim, ssm, transformer  # noqa: F401
 from repro.models.transformer import (  # noqa: F401
     decode_step,
     forward,

@@ -22,13 +22,100 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import pim_linear
+from repro.core import slicing as slc
 from repro.dist import shard
+from repro.quant import quantize as quantlib
 
 ATTN_CHUNK = 512
 
 
 def _dtype(cfg: ArchConfig):
     return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ pim
+class PimTap:
+    """Calibration recorder: stands in for a plan leaf during the capture
+    forward of ``repro.models.pim.prepare_pim_params``. ``pim_matmul``
+    records the projection's input activations and runs the float path, so
+    calibration sees exactly the activations the real forward produces."""
+
+    def __init__(self):
+        self.x: list[np.ndarray] = []
+
+    def record(self, x2d: jnp.ndarray) -> None:
+        self.x.append(np.asarray(x2d, np.float32))
+
+
+def _plan_to_pim_plan(plan: dict, cfg: ArchConfig, rows: int) -> pim_linear.PimPlan:
+    """Rebuild a ``pim_linear.PimPlan`` from a plan-leaf dict + static cfg.
+
+    Plan leaves carry only arrays (so they ride ``lax.scan`` / ``vmap``
+    over the stacked block axis); everything static — slicing, ADC,
+    speculation — is reconstructed from ``cfg`` here.
+    """
+    slicing = tuple(cfg.pim_weight_slicing)
+    lq = quantlib.LayerQuant(
+        w_scale=plan["w_scale"], x_scale=plan["x_scale"],
+        x_zero_point=jnp.asarray(0, jnp.int32), x_signed=True,
+        out_scale=jnp.asarray(1.0, jnp.float32),
+        out_zero_point=jnp.asarray(0, jnp.int32), bias=None)
+    enc = None
+    if "planes" in plan:
+        enc = co.EncodedWeights(
+            planes=plan["planes"], centers=plan["enc_centers"],
+            slicing=slicing,
+            shifts=slc.slice_shifts(slicing, slc.WEIGHT_BITS),
+            rows=rows, rows_per_xbar=co.ROWS_PER_CROSSBAR)
+    return pim_linear.PimPlan(
+        enc=enc, lq=lq, w_q=plan["w_q"], weight_slicing=slicing,
+        adc=adc_lib.ADCConfig(bits=cfg.pim_adc_bits, signed=True),
+        speculation=cfg.pim_speculation,
+        fast_w_off=plan.get("w_off"), fast_centers=plan.get("centers"),
+        fast_scale=plan.get("scale"))
+
+
+def pim_matmul(x: jnp.ndarray, w: jnp.ndarray, plan,
+               cfg: ArchConfig) -> jnp.ndarray:
+    """One weight-static projection, routed through ``cfg.pim_mode``.
+
+    ``x (..., R) @ w (R, C)``. ``plan`` is this projection's compiled leaf
+    from ``repro.models.pim.prepare_pim_params`` (``None`` -> float path:
+    training, rwkv blocks, or ``pim_mode == 'off'``). Modes:
+
+      fast  — centered int8 MXU matmul (paper Eq. 1; Pallas kernel when
+              ``cfg.pim_use_pallas``, XLA fallback otherwise).
+      exact — bit-exact accelerator simulation (Center+Offset, sliced
+              crossbars, ADC, speculation) via ``pim_linear.forward_exact``.
+      int8  — ideal 8b-quantized reference (``forward_int_reference``);
+              the dequant oracle ``exact`` matches bit-for-bit at a
+              non-saturating ADC.
+    """
+    if isinstance(plan, PimTap):
+        plan.record(x.reshape(-1, x.shape[-1]))
+        plan = None
+    if plan is None or cfg.pim_mode == "off":
+        return jnp.einsum("...r,rc->...c", x, w)
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    pp = _plan_to_pim_plan(plan, cfg, rows=w.shape[0])
+    if cfg.pim_mode == "fast":
+        y = pim_linear.forward_fast(xb, pp, use_pallas=cfg.pim_use_pallas)
+    elif cfg.pim_mode == "exact":
+        y = pim_linear.forward_exact(xb, pp)
+    elif cfg.pim_mode == "int8":
+        y = pim_linear.forward_int_reference(xb, pp)
+    else:
+        raise ValueError(f"unknown pim_mode {cfg.pim_mode!r}")
+    return y.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
+def plan_leaf(plans, key: str):
+    """``plans[key]`` tolerating an absent plan tree (float path)."""
+    return None if plans is None else plans.get(key)
 
 
 def act_fn(name: str):
@@ -102,13 +189,13 @@ def init_attention(key, cfg: ArchConfig) -> tuple[dict, dict]:
 
 
 def qkv_project(params: dict, cfg: ArchConfig, x: jnp.ndarray,
-                positions: jnp.ndarray):
+                positions: jnp.ndarray, plans=None):
     """x (B, S, D) -> q (B,S,H,hd), k/v (B,S,K,hd), RoPE applied."""
     B, S, _ = x.shape
     nh, nk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = jnp.einsum("bsd,de->bse", x, params["wq"])
-    k = jnp.einsum("bsd,de->bse", x, params["wk"])
-    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    q = pim_matmul(x, params["wq"], plan_leaf(plans, "wq"), cfg)
+    k = pim_matmul(x, params["wk"], plan_leaf(plans, "wk"), cfg)
+    v = pim_matmul(x, params["wv"], plan_leaf(plans, "wv"), cfg)
     if cfg.qkv_bias:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -202,14 +289,15 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def attention_block(params: dict, cfg: ArchConfig, x: jnp.ndarray,
-                    positions: jnp.ndarray) -> jnp.ndarray:
+                    positions: jnp.ndarray, plans=None) -> jnp.ndarray:
     """Full-sequence attention (train / prefill)."""
     B, S, _ = x.shape
-    q, k, v = qkv_project(params, cfg, x, positions)
+    q, k, v = qkv_project(params, cfg, x, positions, plans)
     q = shard(q, "batch", "seq", None, None)
     out = chunked_attention(q, k, v, q_positions=positions, kv_len=S,
                             causal=cfg.causal)
-    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), params["wo"])
+    return pim_matmul(out.reshape(B, S, -1), params["wo"],
+                      plan_leaf(plans, "wo"), cfg)
 
 
 # ------------------------------------------------------------------ mlp
@@ -226,12 +314,13 @@ def init_mlp(key, cfg: ArchConfig) -> tuple[dict, dict]:
     return p, s
 
 
-def mlp_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+def mlp_block(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+              plans=None) -> jnp.ndarray:
     a = act_fn(cfg.activation)
-    h = a(jnp.einsum("bsd,df->bsf", x, params["w1"])) \
-        * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    h = a(pim_matmul(x, params["w1"], plan_leaf(plans, "w1"), cfg)) \
+        * pim_matmul(x, params["w3"], plan_leaf(plans, "w3"), cfg)
     h = shard(h, "batch", "seq", "tp")
-    return jnp.einsum("bsf,fd->bsd", h, params["w2"])
+    return pim_matmul(h, params["w2"], plan_leaf(plans, "w2"), cfg)
 
 
 # ------------------------------------------------------------------ moe
@@ -259,7 +348,26 @@ def _moe_group_size(E: int) -> int:
     return 1024 if E >= 64 else 512
 
 
-def moe_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+def _expert_matmul(x5: jnp.ndarray, w3: jnp.ndarray, plan,
+                   cfg: ArchConfig, spec: str) -> jnp.ndarray:
+    """Per-expert projection: ``x5`` with an expert axis at dim 2 contracted
+    against ``w3 (E, d_in, d_out)``. ``plan`` leaves carry a leading expert
+    axis; the 2D pim path is vmapped over it (each expert is its own
+    crossbar-programmed layer)."""
+    if isinstance(plan, PimTap):
+        plan.record(jnp.moveaxis(x5, 2, 0).reshape(
+            x5.shape[2], -1, x5.shape[-1]))
+        plan = None
+    if plan is None or cfg.pim_mode == "off":
+        return jnp.einsum(spec, x5, w3)
+    xt = jnp.moveaxis(x5, 2, 0)  # (E, B, nG, cap, d_in)
+    yt = jax.vmap(lambda xe, we, pe: pim_matmul(xe, we, pe, cfg))(
+        xt, w3, plan)
+    return jnp.moveaxis(yt, 0, 2)
+
+
+def moe_block(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+              plans=None) -> jnp.ndarray:
     """Top-k capacity-based MoE, EP over 'experts' (GShard-style).
 
     Dispatch and combine are *one-hot einsums over sub-groups of slots* —
@@ -273,7 +381,7 @@ def moe_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
         # decode: merge the batch into one dispatch group — per-token groups
         # would give every token a private (E x cap) buffer, i.e. dense
         # compute over all experts for one active row each (E-fold waste)
-        out = moe_block(params, cfg, x.reshape(1, B, D))
+        out = moe_block(params, cfg, x.reshape(1, B, D), plans)
         return out.reshape(B, 1, D)
     E, k = cfg.n_experts, cfg.experts_per_token
     a = act_fn(cfg.activation)
@@ -316,10 +424,13 @@ def moe_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
 
     buf = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)  # (B, nG, E, cap, D)
     buf = shard(buf, "batch", None, "experts", None, None)
-    h = a(jnp.einsum("bnecd,edf->bnecf", buf, params["w1"])) \
-        * jnp.einsum("bnecd,edf->bnecf", buf, params["w3"])
+    h = a(_expert_matmul(buf, params["w1"], plan_leaf(plans, "w1"), cfg,
+                         "bnecd,edf->bnecf")) \
+        * _expert_matmul(buf, params["w3"], plan_leaf(plans, "w3"), cfg,
+                         "bnecd,edf->bnecf")
     h = shard(h, "batch", None, "experts", None, "tp")
-    y = jnp.einsum("bnecf,efd->bnecd", h, params["w2"])
+    y = _expert_matmul(h, params["w2"], plan_leaf(plans, "w2"), cfg,
+                       "bnecf,efd->bnecd")
     y = shard(y, "batch", None, "experts", None, None)
 
     combine = dispatch * fw[..., None, None]
@@ -346,6 +457,7 @@ def embed(params: dict, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
     return params["embed"][tokens]
 
 
-def lm_head(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
-    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+def lm_head(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+            plan=None) -> jnp.ndarray:
+    logits = pim_matmul(x, params["head"], plan, cfg)
     return shard(logits, "batch", "seq", "vocab")

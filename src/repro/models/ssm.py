@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist import shard
+from repro.models.layers import pim_matmul, plan_leaf
 
 SCAN_CHUNK = 128
 
@@ -106,10 +107,14 @@ def _mamba_step(params, cfg, h, xt, bt, ct, dtt):
     return h, shard(y, "batch", "tp")
 
 
-def _mamba_preprocess(params, cfg, x, conv_state=None):
-    """Shared projections. x (B, S, d) -> (xin, z, dt, B, C) all (B, S, ...)."""
+def _mamba_preprocess(params, cfg, x, conv_state=None, plans=None):
+    """Shared projections. x (B, S, d) -> (xin, z, dt, B, C) all (B, S, ...).
+
+    ``plans`` routes the weight-static in/x projections through
+    ``cfg.pim_mode`` (the depthwise conv and low-rank dt path stay float —
+    they are not crossbar-shaped matmuls)."""
     di, dtr, ds, conv = mamba_dims(cfg)
-    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = pim_matmul(x, params["in_proj"], plan_leaf(plans, "in_proj"), cfg)
     xin, z = jnp.split(xz, 2, axis=-1)
     # TP over d_inner: the selective-scan recurrence is elementwise in di,
     # so this layout keeps the whole recurrence device-local. (Seq cannot
@@ -127,7 +132,7 @@ def _mamba_preprocess(params, cfg, x, conv_state=None):
              for i in range(conv))
     xc = jax.nn.silu(xc + params["conv_b"])
     new_conv_state = hist[:, -(conv - 1):] if conv > 1 else hist[:, :0]
-    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_proj"])
+    dbc = pim_matmul(xc, params["x_proj"], plan_leaf(plans, "x_proj"), cfg)
     dt_lr, bmat, cmat = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
     dt_full = jax.nn.softplus(
         jnp.einsum("bsr,re->bse", dt_lr, params["dt_proj"])
@@ -137,11 +142,13 @@ def _mamba_preprocess(params, cfg, x, conv_state=None):
             new_conv_state)
 
 
-def mamba_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+def mamba_block(params: dict, cfg: ArchConfig, x: jnp.ndarray,
+                plans=None) -> jnp.ndarray:
     """Full-sequence Mamba (train / prefill). x: (B, S, d)."""
     B, S, _ = x.shape
     di, dtr, ds, conv = mamba_dims(cfg)
-    xc, z, dt_full, bmat, cmat, _ = _mamba_preprocess(params, cfg, x)
+    xc, z, dt_full, bmat, cmat, _ = _mamba_preprocess(params, cfg, x,
+                                                      plans=plans)
 
     def step(h, xs_t):
         xt, bt, ct, dtt = xs_t
@@ -153,7 +160,8 @@ def mamba_block(params: dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
     _, ys = _chunked_scan(step, h0, xs, SCAN_CHUNK, cfg.remat)
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)         # (B, S, di)
     y = y * jax.nn.silu(z)
-    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return pim_matmul(y, params["out_proj"], plan_leaf(plans, "out_proj"),
+                      cfg)
 
 
 def init_mamba_state(cfg: ArchConfig, batch: int) -> dict:
@@ -165,14 +173,15 @@ def init_mamba_state(cfg: ArchConfig, batch: int) -> dict:
 
 
 def mamba_decode_step(params: dict, cfg: ArchConfig, state: dict,
-                      x: jnp.ndarray) -> tuple[dict, jnp.ndarray]:
+                      x: jnp.ndarray, plans=None) -> tuple[dict, jnp.ndarray]:
     """x: (B, 1, d) -> (new_state, y (B, 1, d))."""
     xc, z, dt_full, bmat, cmat, new_conv = _mamba_preprocess(
-        params, cfg, x, conv_state=state["conv"])
+        params, cfg, x, conv_state=state["conv"], plans=plans)
     h, y = _mamba_step(params, cfg, state["h"], xc[:, 0], bmat[:, 0],
                        cmat[:, 0], dt_full[:, 0])
     y = (y[:, None, :]).astype(x.dtype) * jax.nn.silu(z)
-    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = pim_matmul(y, params["out_proj"], plan_leaf(plans, "out_proj"),
+                     cfg)
     return {"h": h, "conv": new_conv}, out
 
 

@@ -92,13 +92,18 @@ def init_params(cfg: ArchConfig, key) -> tuple[dict, dict]:
 
 
 # ------------------------------------------------------------------ blocks
+_subplan = L.plan_leaf  # ``plan[key]`` tolerating an absent plan tree
+
+
 def _apply_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
-                 x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+                 x: jnp.ndarray, positions: jnp.ndarray,
+                 plan=None) -> jnp.ndarray:
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
-        h = L.attention_block(bp["core"], cfg, h, positions)
+        h = L.attention_block(bp["core"], cfg, h, positions,
+                              plans=_subplan(plan, "core"))
     elif kind == "mamba":
-        h = S.mamba_block(bp["core"], cfg, h)
+        h = S.mamba_block(bp["core"], cfg, h, plans=_subplan(plan, "core"))
     elif kind == "rwkv":
         h = S.rwkv_time_mix(bp["core"], cfg, h)
     x = x + h
@@ -106,9 +111,9 @@ def _apply_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
     if kind == "rwkv":
         h = S.rwkv_channel_mix(bp["ffn"], cfg, h)
     elif cfg.moe_layer(pattern_idx):
-        h = L.moe_block(bp["ffn"], cfg, h)
+        h = L.moe_block(bp["ffn"], cfg, h, plans=_subplan(plan, "ffn"))
     else:
-        h = L.mlp_block(bp["ffn"], cfg, h)
+        h = L.mlp_block(bp["ffn"], cfg, h, plans=_subplan(plan, "ffn"))
     x = x + h
     return shard(x, "batch", "seq", None)
 
@@ -122,35 +127,53 @@ def embed_inputs(params: dict, cfg: ArchConfig, inputs: jnp.ndarray):
     return shard(x, "batch", "seq", None)
 
 
-def forward_hidden(params: dict, cfg: ArchConfig,
-                   inputs: jnp.ndarray) -> jnp.ndarray:
-    """Full-sequence forward to final hidden states (B, S, D)."""
+def _plan_blocks(cfg: ArchConfig, plans) -> tuple:
+    """Per-pattern-position plan trees (Nones when no plans ride along)."""
+    if plans is None:
+        return tuple([None] * len(cfg.block_pattern))
+    return tuple(plans["blocks"])
+
+
+def forward_hidden(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
+                   plans=None) -> jnp.ndarray:
+    """Full-sequence forward to final hidden states (B, S, D).
+
+    ``plans`` is the compiled PIM-plan pytree from
+    ``repro.models.pim.prepare_pim_params``; its stacked block plans ride
+    the ``lax.scan`` next to the stacked params.
+    """
     x = embed_inputs(params, cfg, inputs)
     B, Seq = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(Seq, dtype=jnp.int32), (B, Seq))
 
-    def repeat_body(carry, rep_params):
+    def repeat_body(carry, xs):
         h = carry
+        rep_params, rep_plans = xs
         for i, kind in enumerate(cfg.block_pattern):
             if cfg.remat and len(cfg.block_pattern) > 1:
                 # nested remat: backward re-gathers one block's weights at a
                 # time instead of the whole pattern body's (Jamba: 8 layers)
                 h = jax.checkpoint(
-                    lambda bp, hh, _i=i, _k=kind: _apply_block(
-                        _k, _i, bp, cfg, hh, positions))(rep_params[i], h)
+                    lambda bp, pl, hh, _i=i, _k=kind: _apply_block(
+                        _k, _i, bp, cfg, hh, positions, plan=pl))(
+                            rep_params[i], rep_plans[i], h)
             else:
-                h = _apply_block(kind, i, rep_params[i], cfg, h, positions)
+                h = _apply_block(kind, i, rep_params[i], cfg, h, positions,
+                                 plan=rep_plans[i])
         return h, None
 
     body = jax.checkpoint(repeat_body) if cfg.remat else repeat_body
-    x, _ = jax.lax.scan(body, x, tuple(params["blocks"]))
+    x, _ = jax.lax.scan(body, x,
+                        (tuple(params["blocks"]), _plan_blocks(cfg, plans)))
     return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
 
 
-def forward(params: dict, cfg: ArchConfig, inputs: jnp.ndarray) -> jnp.ndarray:
+def forward(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
+            plans=None) -> jnp.ndarray:
     """Full-sequence forward to logits. inputs: tokens (B,S) or embeds (B,S,D)."""
     return L.lm_head(params["embed"], cfg,
-                     forward_hidden(params, cfg, inputs))
+                     forward_hidden(params, cfg, inputs, plans),
+                     plan=_subplan(_subplan(plans, "embed"), "head"))
 
 
 # ------------------------------------------------------------------ losses
@@ -303,7 +326,7 @@ def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 
 def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
-                 pos: jnp.ndarray) -> tuple[dict, jnp.ndarray]:
+                 pos: jnp.ndarray, plans=None) -> tuple[dict, jnp.ndarray]:
     """Single-token attention against the (sequence-sharded) KV cache.
 
     ``pos`` is a scalar (lockstep: the whole batch shares one position) or
@@ -315,7 +338,7 @@ def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
         positions = jnp.broadcast_to(pos[None, None], (B, 1))
     else:
         positions = pos[:, None]
-    q, k_new, v_new = L.qkv_project(bp["core"], cfg, x, positions)
+    q, k_new, v_new = L.qkv_project(bp["core"], cfg, x, positions, plans)
     # align the query/new-KV batch with the cache's batch sharding so the
     # whole attention stays device-local (otherwise the dequantized cache
     # moves across the mesh every step)
@@ -340,17 +363,20 @@ def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
         new_cache = {"k": k_cache, "v": v_cache}
     out = L.chunked_attention(q, k_cache, v_cache, q_positions=positions,
                               kv_len=pos + 1, causal=True)
-    y = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, -1), bp["core"]["wo"])
+    y = L.pim_matmul(out.reshape(B, 1, -1), bp["core"]["wo"],
+                     L.plan_leaf(plans, "wo"), cfg)
     return new_cache, y
 
 
 def _decode_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
-                  cache: dict, x: jnp.ndarray, pos: jnp.ndarray):
+                  cache: dict, x: jnp.ndarray, pos: jnp.ndarray, plan=None):
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
-        cache, h = _attn_decode(bp, cfg, cache, h, pos)
+        cache, h = _attn_decode(bp, cfg, cache, h, pos,
+                                plans=_subplan(plan, "core"))
     elif kind == "mamba":
-        cache, h = S.mamba_decode_step(bp["core"], cfg, cache, h)
+        cache, h = S.mamba_decode_step(bp["core"], cfg, cache, h,
+                                       plans=_subplan(plan, "core"))
     else:
         cache, h = S.rwkv_time_mix_decode(bp["core"], cfg, cache, h)
     x = x + h
@@ -360,14 +386,14 @@ def _decode_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
                                x_prev=cache["cm_prev"][:, None, :])
         cache = dict(cache, cm_prev=L.rmsnorm(bp["norm2"], x, cfg.norm_eps)[:, 0])
     elif cfg.moe_layer(pattern_idx):
-        h = L.moe_block(bp["ffn"], cfg, h)
+        h = L.moe_block(bp["ffn"], cfg, h, plans=_subplan(plan, "ffn"))
     else:
-        h = L.mlp_block(bp["ffn"], cfg, h)
+        h = L.mlp_block(bp["ffn"], cfg, h, plans=_subplan(plan, "ffn"))
     return cache, x + h
 
 
 def decode_step(params: dict, cfg: ArchConfig, state: dict,
-                tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+                tokens: jnp.ndarray, plans=None) -> tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B, 1) ids or (B, 1, D) embeds.
 
     ``state["pos"]`` may be a scalar (lockstep) or ``(B,)`` (per-slot,
@@ -378,18 +404,20 @@ def decode_step(params: dict, cfg: ArchConfig, state: dict,
 
     def repeat_body(carry, xs):
         h = carry
-        rep_params, rep_caches = xs
+        rep_params, rep_caches, rep_plans = xs
         new_caches = []
         for i, kind in enumerate(cfg.block_pattern):
             c, h = _decode_block(kind, i, rep_params[i], cfg, rep_caches[i],
-                                 h, pos)
+                                 h, pos, plan=rep_plans[i])
             new_caches.append(c)
         return h, tuple(new_caches)
 
     x, new_caches = jax.lax.scan(
-        repeat_body, x, (tuple(params["blocks"]), tuple(state["caches"])))
+        repeat_body, x, (tuple(params["blocks"]), tuple(state["caches"]),
+                         _plan_blocks(cfg, plans)))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.lm_head(params["embed"], cfg, x)
+    logits = L.lm_head(params["embed"], cfg, x,
+                       plan=_subplan(_subplan(plans, "embed"), "head"))
     new_state = {"caches": list(new_caches), "pos": pos + 1}
     return logits, new_state
 
@@ -413,13 +441,15 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
 
     def repeat_body(carry, xs):
         h = carry
-        rep_params, rep_caches = xs
+        rep_params, rep_caches, rep_plans = xs
         new_caches = []
         for i, kind in enumerate(cfg.block_pattern):
-            bp, cache = rep_params[i], rep_caches[i]
+            bp, cache, plan = rep_params[i], rep_caches[i], rep_plans[i]
+            core_plan = _subplan(plan, "core")
             hn = L.rmsnorm(bp["norm1"], h, cfg.norm_eps)
             if kind == "attn":
-                q, k, v = L.qkv_project(bp["core"], cfg, hn, positions)
+                q, k, v = L.qkv_project(bp["core"], cfg, hn, positions,
+                                        core_plan)
                 if int8_cache:
                     kq, ks = _quantize_kv(k)
                     vq, vs = _quantize_kv(v)
@@ -464,11 +494,13 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
                     o = L.chunked_attention(q, k_all, v_all,
                                             q_positions=positions,
                                             kv_len=kv_len, causal=True)
-                core_out = jnp.einsum("bse,ed->bsd", o.reshape(B, C, -1),
-                                      bp["core"]["wo"])
+                core_out = L.pim_matmul(o.reshape(B, C, -1),
+                                        bp["core"]["wo"],
+                                        L.plan_leaf(core_plan, "wo"), cfg)
             elif kind == "mamba":
                 xc, z, dtf, bm, cm, new_conv = S._mamba_preprocess(
-                    bp["core"], cfg, hn, conv_state=cache["conv"])
+                    bp["core"], cfg, hn, conv_state=cache["conv"],
+                    plans=core_plan)
 
                 def step(hh, xs_t):
                     xt, bt, ct, dtt = xs_t
@@ -479,7 +511,9 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
                 h_fin, ys = S._chunked_scan(step, cache["h"], xs_seq,
                                             S.SCAN_CHUNK, cfg.remat)
                 y = jnp.moveaxis(ys, 0, 1).astype(hn.dtype) * jax.nn.silu(z)
-                core_out = jnp.einsum("bse,ed->bsd", y, bp["core"]["out_proj"])
+                core_out = L.pim_matmul(y, bp["core"]["out_proj"],
+                                        L.plan_leaf(core_plan, "out_proj"),
+                                        cfg)
                 cache = {"h": h_fin, "conv": new_conv}
             else:  # rwkv
                 x_prev = jnp.concatenate(
@@ -513,9 +547,11 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
                                              x_prev=cm_hist)
                 cache["cm_prev"] = hn2[:, -1]
             elif cfg.moe_layer(i):
-                ffn_out = L.moe_block(bp["ffn"], cfg, hn2)
+                ffn_out = L.moe_block(bp["ffn"], cfg, hn2,
+                                      plans=_subplan(plan, "ffn"))
             else:
-                ffn_out = L.mlp_block(bp["ffn"], cfg, hn2)
+                ffn_out = L.mlp_block(bp["ffn"], cfg, hn2,
+                                      plans=_subplan(plan, "ffn"))
             h = shard(h + ffn_out, "batch", "seq", None)
             new_caches.append(cache)
         return h, tuple(new_caches)
@@ -524,16 +560,20 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
 
 
 def _run_prefill_body(params: dict, cfg: ArchConfig, x: jnp.ndarray,
-                      caches, body) -> tuple[jnp.ndarray, list]:
+                      caches, body, plans=None) -> tuple[jnp.ndarray, list]:
     body = jax.checkpoint(body) if cfg.remat else body
     x, new_caches = jax.lax.scan(
-        body, x, (tuple(params["blocks"]), tuple(caches)))
+        body, x, (tuple(params["blocks"]), tuple(caches),
+                  _plan_blocks(cfg, plans)))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return L.lm_head(params["embed"], cfg, x[:, -1:]), list(new_caches)
+    logits = L.lm_head(params["embed"], cfg, x[:, -1:],
+                       plan=_subplan(_subplan(plans, "embed"), "head"))
+    return logits, list(new_caches)
 
 
 def prefill(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
-            max_len: int | None = None) -> tuple[jnp.ndarray, dict]:
+            max_len: int | None = None,
+            plans=None) -> tuple[jnp.ndarray, dict]:
     """Process a prompt, returning last-position logits + a filled decode
     state. Cache buffers sized to max_len (default: prompt length).
     Attention runs over this call's raw K/V (``causal=cfg.causal``, so
@@ -546,12 +586,13 @@ def prefill(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
     body = _prefill_repeat_body(cfg, B, Seq, positions,
                                 pos0=jnp.zeros((), jnp.int32),
                                 kv_len=Seq, raw_attn=True)
-    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body)
+    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body,
+                                       plans=plans)
     return logits, {"caches": caches, "pos": jnp.asarray(Seq, jnp.int32)}
 
 
 def prefill_chunk(params: dict, cfg: ArchConfig, state: dict,
-                  tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+                  tokens: jnp.ndarray, plans=None) -> tuple[jnp.ndarray, dict]:
     """Process the next prompt chunk of an in-flight (chunked) prefill.
 
     ``state`` is a scalar-pos decode state whose caches hold positions
@@ -574,7 +615,8 @@ def prefill_chunk(params: dict, cfg: ArchConfig, state: dict,
                                  (B, C))
     body = _prefill_repeat_body(cfg, B, C, positions, pos0=pos0,
                                 kv_len=pos0 + C, raw_attn=False)
-    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body)
+    logits, caches = _run_prefill_body(params, cfg, x, state["caches"], body,
+                                       plans=plans)
     return logits, {"caches": caches, "pos": pos0 + C}
 
 

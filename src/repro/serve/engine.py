@@ -1,10 +1,13 @@
 """Batched serving engine: chunked prefill + batched greedy/sampled decode.
 
 The engine owns jitted prefill/decode functions for one (arch, batch,
-max_len) bucket and exposes a request-batch API. RAELLA integration: with
-``cfg.pim_mode == 'fast'`` the weight-static projections run the centered
-int8 path (the paper's Eq. 1 on the MXU) — see core.pim_linear; with
-'exact' the full accelerator simulation (small models only).
+max_len) bucket and exposes a request-batch API. RAELLA integration:
+with ``cfg.pim_mode != 'off'`` the engine requires the compiled plan
+pytree from ``repro.models.pim.prepare_pim_params`` and passes it to
+every jitted prefill/decode call — 'fast' runs the weight-static
+projections on the centered int8 path (the paper's Eq. 1 on the MXU, see
+``models.layers.pim_matmul``), 'exact' the bit-exact accelerator
+simulation (small models only), 'int8' the ideal 8b-quantized reference.
 """
 
 from __future__ import annotations
@@ -29,17 +32,25 @@ class GenerationResult:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: Any, *,
-                 max_len: int = 512, temperature: float = 0.0):
+                 max_len: int = 512, temperature: float = 0.0,
+                 plans: Any = None):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only; no decode")
+        if cfg.pim_mode != "off" and plans is None:
+            raise ValueError(
+                f"pim_mode={cfg.pim_mode!r} needs compiled plans — call "
+                "repro.models.pim.prepare_pim_params(params, cfg, "
+                "calib_tokens) and pass plans=")
         self.cfg = cfg
         self.params = params
+        self.plans = plans
         self.max_len = max_len
         self.temperature = temperature
         self._prefill = jax.jit(
-            lambda p, toks: T.prefill(p, cfg, toks, max_len=max_len))
+            lambda p, pl, toks: T.prefill(p, cfg, toks, max_len=max_len,
+                                          plans=pl))
         self._decode = jax.jit(
-            lambda p, st, tok: T.decode_step(p, cfg, st, tok))
+            lambda p, pl, st, tok: T.decode_step(p, cfg, st, tok, plans=pl))
 
     def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
@@ -65,13 +76,13 @@ class ServeEngine:
         if plen + steps > self.max_len:
             raise ValueError("prompt + steps exceeds engine max_len")
         key = None if self.temperature <= 0.0 else jax.random.key(seed)
-        logits, state = self._prefill(self.params, toks)
+        logits, state = self._prefill(self.params, self.plans, toks)
         out = []
         tok = self._pick(logits, key)
         out.append(tok)
         for i in range(steps - 1):
             step_key = None if key is None else jax.random.fold_in(key, i)
-            logits, state = self._decode(self.params, state, tok)
+            logits, state = self._decode(self.params, self.plans, state, tok)
             tok = self._pick(logits, step_key)
             out.append(tok)
         gen = np.asarray(jnp.concatenate(out, axis=1))

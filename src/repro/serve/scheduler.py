@@ -2,10 +2,13 @@
 
 The lockstep ``ServeEngine`` pads every request in a batch to one prompt
 length and decodes until the *slowest* request finishes — a slot that
-retired early still burns a decode-step's FLOPs (and, under ``pim_mode``,
-simulated ADC converts) on padding. RAELLA's economy is converts per
-*useful* output, so the serving layer admits and retires requests
-independently instead:
+retired early still burns a decode-step's FLOPs (and, under a non-'off'
+``cfg.pim_mode``, PIM-path work: both engines thread the compiled plan
+pytree from ``repro.models.pim.prepare_pim_params`` through every jitted
+prefill/decode call, so the weight-static projections actually run the
+centered-int8 / exact-simulation path) on padding. RAELLA's economy is
+converts per *useful* output, so the serving layer admits and retires
+requests independently instead:
 
 - the batched decode state holds ``n_slots`` KV-cache slots with
   *per-slot* positions (``init_decode_state(..., per_slot_pos=True)``);
@@ -109,13 +112,20 @@ class ContinuousServeEngine:
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, *, n_slots: int = 4,
-                 max_len: int = 512, prefill_chunk: int = 64):
+                 max_len: int = 512, prefill_chunk: int = 64,
+                 plans: Any = None):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only; no decode")
         if n_slots < 1 or prefill_chunk < 1:
             raise ValueError("n_slots and prefill_chunk must be >= 1")
+        if cfg.pim_mode != "off" and plans is None:
+            raise ValueError(
+                f"pim_mode={cfg.pim_mode!r} needs compiled plans — call "
+                "repro.models.pim.prepare_pim_params(params, cfg, "
+                "calib_tokens) and pass plans=")
         self.cfg = cfg
         self.params = params
+        self.plans = plans
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
@@ -125,9 +135,10 @@ class ContinuousServeEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = EngineStats()
         self._chunk = jax.jit(
-            lambda p, st, toks: T.prefill_chunk(p, cfg, st, toks))
+            lambda p, pl, st, toks: T.prefill_chunk(p, cfg, st, toks,
+                                                    plans=pl))
         self._decode = jax.jit(
-            lambda p, st, tok: T.decode_step(p, cfg, st, tok))
+            lambda p, pl, st, tok: T.decode_step(p, cfg, st, tok, plans=pl))
         self._insert = jax.jit(
             lambda st, one, slot: T.insert_request(st, one, slot))
         # jax arrays are immutable, so one zero template serves every
@@ -208,7 +219,8 @@ class ContinuousServeEngine:
             lo = slot.n_prefilled
             hi = min(lo + self.prefill_chunk, prompt.shape[0])
             logits, slot.state1 = self._chunk(
-                self.params, slot.state1, jnp.asarray(prompt[None, lo:hi]))
+                self.params, self.plans, slot.state1,
+                jnp.asarray(prompt[None, lo:hi]))
             slot.n_prefilled = hi
             self.stats.prefill_chunks += 1
             if hi == prompt.shape[0]:
@@ -226,8 +238,8 @@ class ContinuousServeEngine:
             toks = np.zeros((self.n_slots, 1), np.int32)
             for i in live:
                 toks[i, 0] = self.slots[i].next_tok
-            logits, self.state = self._decode(self.params, self.state,
-                                              jnp.asarray(toks))
+            logits, self.state = self._decode(self.params, self.plans,
+                                              self.state, jnp.asarray(toks))
             self.stats.decode_steps += 1
             self.stats.decode_slot_tokens += len(live)
             greedy = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))

@@ -1,0 +1,29 @@
+"""Every ``benchmarks/run.py`` registry entry runs at toy size, returns
+JSON-serializable output, and its headline formatter works on that
+output — so the benchmark surface cannot silently rot (CI: the
+``benchmarks-smoke`` job)."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:  # `benchmarks` package lives at the repo root
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks.run import REGISTRY  # noqa: E402
+
+
+def test_registry_covers_expected_entries():
+    for name in ("lm_on_pim", "serve_pim", "serve_continuous"):
+        assert name in REGISTRY
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_entry_runs_and_serializes(name):
+    entry = REGISTRY[name]
+    out = entry.run(**entry.smoke_kwargs)
+    json.dumps(out)  # contract: plain python scalars/lists/dicts only
+    assert isinstance(entry.derive(out), str)

@@ -131,3 +131,79 @@ class TestSlicedCrossbarKernel:
         got = ops.sliced_crossbar_matmul(xs, wp, m, use_pallas=True)
         want = ref.sliced_crossbar_matmul(xs, wp, m)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestEdgeShapesBothPaths:
+    """Edge shapes through BOTH dispatch paths (Pallas interpret and the
+    XLA fallback), each checked against an independent numpy oracle — so
+    a shared bug in kernel *and* ``ref`` cannot hide."""
+
+    @staticmethod
+    def _np_centered(x, w, c):
+        xs = np.asarray(x, np.int64)
+        y = xs @ np.asarray(w, np.int64)
+        return y + xs.sum(axis=1, keepdims=True) * np.asarray(c, np.int64)
+
+    @staticmethod
+    def _np_sliced(xs, wp, m, rows_per_xbar=512, lo=-64, hi=63):
+        n_i, B, R = xs.shape
+        n_j, _, C = wp.shape
+        n_seg = -(-R // rows_per_xbar)
+        out = np.zeros((B, C), np.int64)
+        for i in range(n_i):
+            for j in range(n_j):
+                for s in range(n_seg):
+                    r0, r1 = s * rows_per_xbar, min((s + 1) * rows_per_xbar, R)
+                    cs = (np.asarray(xs[i, :, r0:r1], np.int64)
+                          @ np.asarray(wp[j, r0:r1], np.int64))
+                    out += np.clip(cs, lo, hi) * int(m[i, j])
+        return out
+
+    @pytest.mark.parametrize("use_pallas", [True, False],
+                             ids=["interpret", "xla-fallback"])
+    @pytest.mark.parametrize("B,K,N", [
+        (1, 1, 1),       # full singleton
+        (1, 513, 129),   # B=1, K/N one past a block multiple
+        (5, 7, 1),       # single output column
+        (2, 130, 257),   # N not a multiple of the 128 tile
+        (9, 1, 130),     # K=1 (degenerate contraction)
+    ])
+    def test_centered_int8_edges(self, B, K, N, use_pallas):
+        rng = np.random.default_rng(B * 7919 + K * 31 + N)
+        x = jnp.asarray(rng.integers(-127, 128, (B, K)), jnp.int8)
+        w = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+        c = jnp.asarray(rng.integers(-128, 128, (N,)), jnp.int32)
+        got = ops.centered_int8_matmul(x, w, c, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                      self._np_centered(x, w, c))
+
+    @pytest.mark.parametrize("use_pallas", [True, False],
+                             ids=["interpret", "xla-fallback"])
+    @pytest.mark.parametrize("n_i,n_j,B,R,C", [
+        (1, 1, 1, 1, 1),      # minimal everything
+        (1, 1, 1, 513, 3),    # R one past rows_per_xbar (2 ragged segments)
+        (2, 3, 1, 700, 130),  # B=1, R and C both off-tile
+        (1, 2, 4, 1025, 1),   # C=1, R spills into a third segment
+    ])
+    def test_sliced_crossbar_edges(self, n_i, n_j, B, R, C, use_pallas):
+        rng = np.random.default_rng(n_i * 131 + n_j * 17 + B + R + C)
+        xs = jnp.asarray(rng.integers(0, 16, (n_i, B, R)), jnp.int8)
+        wp = jnp.asarray(rng.integers(-15, 16, (n_j, R, C)), jnp.int8)
+        m = jnp.asarray(rng.choice([1, 2, 4, 16, 64], size=(n_i, n_j)),
+                        jnp.int32)
+        got = ops.sliced_crossbar_matmul(xs, wp, m, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                      self._np_sliced(xs, wp, m))
+
+    def test_saturating_segment_boundary(self):
+        """R not divisible by rows_per_xbar with saturating sums: the
+        ragged tail segment must clamp independently of the full one."""
+        xs = jnp.full((1, 2, 700), 15, jnp.int8)
+        wp = jnp.full((1, 700, 4), 15, jnp.int8)
+        m = jnp.ones((1, 1), jnp.int32)
+        for use_pallas in (True, False):
+            got = ops.sliced_crossbar_matmul(xs, wp, m,
+                                             use_pallas=use_pallas)
+            # both segments (512 rows + 188-row tail) saturate at 63
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.full((2, 4), 126))

@@ -1,0 +1,179 @@
+"""The ``pim_mode`` contract, end-to-end through models + serve.
+
+``prepare_pim_params`` compiles every weight-static projection once
+(Algorithm 1); the plan pytree rides the layer scans, and:
+
+- ``fast`` produces *different* (quantized) logits than ``off`` while
+  greedy tokens agree on the calibration prompt, and stays within the
+  documented dequant tolerance of the ``int8`` ideal-quantized reference;
+- ``exact`` equals the ``int8`` reference **bit-exactly** at noise 0 /
+  non-saturating ADC (the paper's fidelity contract, now at whole-model
+  scope);
+- lockstep and continuous engines stay bit-identical under
+  ``pim_mode='fast'`` (the plans thread through prefill_chunk /
+  decode_step identically).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import pim
+from repro.models import transformer as T
+from repro.serve import ContinuousServeEngine, Request, ServeEngine
+
+STEPS = 6
+
+
+def _calib(cfg, b=2, s=12, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (b, s), 0, cfg.vocab_size), np.int32)
+
+
+@pytest.fixture(scope="module")
+def fast_setup():
+    cfg = dataclasses.replace(configs.get("yi-6b").reduced(),
+                              pim_mode="fast")
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    # pinned prompt seed: greedy token agreement between the float and the
+    # 8b-quantized path is a property of this calibration prompt (random-
+    # init logits are nearly flat, so argmax survives quantization only on
+    # prompts with a clear margin — seed 3 agrees for 8 feedback steps)
+    calib = _calib(cfg, seed=3)
+    plans, specs = pim.prepare_pim_params(params, cfg, calib)
+    return cfg, params, calib, plans, specs
+
+
+class TestFastMode:
+    def test_logits_quantized_but_greedy_tokens_agree(self, fast_setup):
+        """Acceptance: fast produces different (quantized) logits than
+        off while greedy decode tokens agree on the calibration prompt."""
+        cfg, params, calib, plans, _ = fast_setup
+        cfg_off = dataclasses.replace(cfg, pim_mode="off")
+        lg_off = T.forward(params, cfg_off, jnp.asarray(calib))
+        lg_fast = T.forward(params, cfg, jnp.asarray(calib), plans=plans)
+        assert float(jnp.abs(lg_fast - lg_off).max()) > 0
+        max_len = calib.shape[1] + STEPS + 1
+        eng_off = ServeEngine(cfg_off, params, max_len=max_len)
+        eng_fast = ServeEngine(cfg, params, max_len=max_len, plans=plans)
+        t_off = eng_off.generate(calib, steps=STEPS).tokens
+        t_fast = eng_fast.generate(calib, steps=STEPS).tokens
+        np.testing.assert_array_equal(t_off, t_fast)
+
+    def test_fast_within_tolerance_of_int8_reference(self, fast_setup):
+        """Documented tolerance: the centered quantizer (fast) vs the
+        symmetric per-channel quantizer (int8 reference) differ only by
+        combined weight-rounding — a few percent in logit norm on a tiny
+        config."""
+        cfg, params, calib, plans, _ = fast_setup
+        lg_fast = T.forward(params, cfg, jnp.asarray(calib), plans=plans)
+        cfg_i8 = dataclasses.replace(cfg, pim_mode="int8")
+        lg_i8 = T.forward(params, cfg_i8, jnp.asarray(calib), plans=plans)
+        rel = float(jnp.linalg.norm(lg_fast - lg_i8)
+                    / jnp.linalg.norm(lg_i8))
+        assert rel < 0.05
+
+    def test_engines_require_plans(self, fast_setup):
+        cfg, params, *_ = fast_setup
+        with pytest.raises(ValueError, match="prepare_pim_params"):
+            ServeEngine(cfg, params, max_len=16)
+        with pytest.raises(ValueError, match="prepare_pim_params"):
+            ContinuousServeEngine(cfg, params, max_len=16)
+
+    def test_plan_specs_mirror_plans(self, fast_setup, abstract_mesh):
+        """Sharding contract: the spec tree mirrors the plan tree, the
+        int8 offset planes keep the float weight's logical axes, and every
+        leaf resolves under SERVE_RULES."""
+        import jax.sharding as jsh
+
+        from repro.dist import sharding as dist_sharding
+        cfg, params, _, plans, specs = fast_setup
+        assert (jax.tree.structure(jax.tree.map(lambda _: 0, plans))
+                == jax.tree.structure(
+                    jax.tree.map(lambda _: 0, specs,
+                                 is_leaf=lambda x: isinstance(x, tuple))))
+        pspecs = T.param_specs(cfg)
+        attn_idx = cfg.block_pattern.index("attn")
+        w_spec = tuple(pspecs["blocks"][attn_idx]["core"]["wq"])
+        leaf = specs["blocks"][attn_idx]["core"]["wq"]
+        assert leaf["w_off"] == w_spec
+        assert leaf["centers"] == (w_spec[0], w_spec[-1])
+        for name, spec in leaf.items():
+            arr = plans["blocks"][attn_idx]["core"]["wq"][name]
+            assert len(spec) == arr.ndim, name
+        with dist_sharding.axis_rules(dist_sharding.SERVE_RULES):
+            resolved = jax.tree.map(
+                lambda s: dist_sharding.spec_for(s, abstract_mesh),
+                specs, is_leaf=lambda x: isinstance(x, tuple))
+        for p in jax.tree.leaves(
+                resolved, is_leaf=lambda x: isinstance(x, jsh.PartitionSpec)):
+            assert isinstance(p, jsh.PartitionSpec)
+
+    def test_lockstep_vs_continuous_bit_identical(self, fast_setup):
+        cfg, params, calib, plans, _ = fast_setup
+        max_len = calib.shape[1] + STEPS + 1
+        lock = ServeEngine(cfg, params, max_len=max_len, plans=plans)
+        want = lock.generate(calib, steps=STEPS).tokens
+        cont = ContinuousServeEngine(cfg, params, n_slots=2,
+                                     max_len=max_len, prefill_chunk=5,
+                                     plans=plans)
+        outs = cont.run([Request(uid=i, prompt=calib[i],
+                                 max_new_tokens=STEPS)
+                         for i in range(calib.shape[0])])
+        for i, o in enumerate(outs):
+            np.testing.assert_array_equal(o.tokens, want[i])
+
+
+class TestExactMode:
+    def test_exact_equals_int8_reference_bit_exact(self):
+        """At noise 0 with a non-saturating (24b) ADC the full datapath
+        simulation — Center+Offset, sliced crossbars, speculation, signed
+        two-pass — reproduces the ideal 8b-quantized model bit-for-bit,
+        layer after layer through greedy prefill+decode."""
+        cfg = configs.get("yi-6b").reduced(
+            n_layers=1, d_model=32, d_ff=48, vocab_size=64, n_heads=2,
+            n_kv_heads=1, head_dim=16)
+        cfg = dataclasses.replace(cfg, pim_mode="exact")
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        calib = _calib(cfg, b=2, s=8, seed=2)
+        plans, _ = pim.prepare_pim_params(params, cfg, calib)
+        cfg_i8 = dataclasses.replace(cfg, pim_mode="int8")
+
+        lg_e = T.forward(params, cfg, jnp.asarray(calib), plans=plans)
+        lg_i = T.forward(params, cfg_i8, jnp.asarray(calib), plans=plans)
+        np.testing.assert_array_equal(np.asarray(lg_e), np.asarray(lg_i))
+
+        lg_e, st_e = T.prefill(params, cfg, jnp.asarray(calib),
+                               max_len=12, plans=plans)
+        lg_i, st_i = T.prefill(params, cfg_i8, jnp.asarray(calib),
+                               max_len=12, plans=plans)
+        np.testing.assert_array_equal(np.asarray(lg_e), np.asarray(lg_i))
+        tok = jnp.argmax(lg_e[:, -1:], -1)
+        de, _ = T.decode_step(params, cfg, st_e, tok, plans=plans)
+        di, _ = T.decode_step(params, cfg_i8, st_i, tok, plans=plans)
+        np.testing.assert_array_equal(np.asarray(de), np.asarray(di))
+
+
+class TestArchCoverage:
+    """The dispatcher reaches every projection family: GQA attention,
+    MoE experts, and mamba in/x/out (hybrid pattern)."""
+
+    @pytest.mark.parametrize("arch", ["phi3.5-moe-42b",
+                                      "jamba-1.5-large-398b"])
+    def test_fast_forward_close_to_float(self, arch):
+        cfg = dataclasses.replace(configs.get(arch).reduced(),
+                                  pim_mode="fast")
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        calib = _calib(cfg, b=1, s=8, seed=3)
+        plans, _ = pim.prepare_pim_params(params, cfg, calib)
+        cfg_off = dataclasses.replace(cfg, pim_mode="off")
+        lg_off = T.forward(params, cfg_off, jnp.asarray(calib))
+        lg_fast = T.forward(params, cfg, jnp.asarray(calib), plans=plans)
+        assert float(jnp.abs(lg_fast - lg_off).max()) > 0
+        rel = float(jnp.linalg.norm(lg_fast - lg_off)
+                    / jnp.linalg.norm(lg_off))
+        assert rel < 0.2

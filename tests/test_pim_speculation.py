@@ -1,0 +1,79 @@
+"""Property tests for Dynamic Input Slicing (speculation + recovery).
+
+Across *random* speculative slicings (any composition of the 8 input
+bits into 1..4b parts):
+
+- with a non-saturating (24b) ADC, ``speculation.forward`` is bit-exact
+  with the non-speculative exact path (static 1b input slicing) *and*
+  with the ideal unsigned-domain matmul, speculation never fails, and
+  the convert economy holds: ``adc_converts <= no_spec_converts`` (one
+  convert per spec slice instead of eight 1b converts);
+- with the paper's saturating 7b ADC, the work-accounting invariants
+  hold: every failure is an attempt, every recovery convert is billed to
+  a failure (``attempts <= converts <= attempts + max_width *
+  failures``), and the cycle count is spec slices + 8 recovery cycles.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import crossbar as xbar
+from repro.core import slicing as sl
+from repro.core import speculation as spec
+
+WIDE_ADC = adc_lib.ADCConfig(bits=24, signed=True)
+SLICINGS = sl.enumerate_slicings(sl.INPUT_BITS, sl.MAX_DEVICE_BITS)
+
+ROWS, COLS, BATCH = 96, 6, 3
+
+
+def _layer(seed: int):
+    rng = np.random.default_rng(seed)
+    w_u = rng.integers(0, 256, (ROWS, COLS)).astype(np.int64)
+    x = jnp.asarray(rng.integers(0, 256, (BATCH, ROWS)))
+    return w_u, x
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1), st.sampled_from(SLICINGS))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_bit_exact_and_convert_economy_wide_adc(seed, spec_slicing):
+    w_u, x = _layer(seed)
+    enc = co.encode(w_u, (4, 2, 2))
+    psum, stats = spec.forward(x, enc, spec_slicing, WIDE_ADC)
+    psum_ref, _ = xbar.forward(x, enc, (1,) * sl.INPUT_BITS, WIDE_ADC)
+    np.testing.assert_array_equal(np.asarray(psum), np.asarray(psum_ref))
+    np.testing.assert_array_equal(
+        np.asarray(psum), np.asarray(xbar.matmul_reference(x, w_u)))
+    # lossless converter: nothing saturates, so no recovery converts and
+    # speculation strictly beats the recovery-only (8 converts/col) design
+    assert int(stats.spec_failures) == 0
+    assert int(stats.adc_converts) == int(stats.spec_attempts)
+    assert int(stats.adc_converts) <= int(stats.no_spec_converts)
+    assert int(stats.recovery_saturations) == 0
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1), st.sampled_from(SLICINGS))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_failure_accounting_raella_adc(seed, spec_slicing):
+    w_u, x = _layer(seed)
+    enc = co.encode(w_u, (4, 2, 2))
+    _, stats = spec.forward(x, enc, spec_slicing, adc_lib.RAELLA_ADC)
+    attempts = int(stats.spec_attempts)
+    failures = int(stats.spec_failures)
+    converts = int(stats.adc_converts)
+    n_conversion_sites = BATCH * enc.n_segments * enc.cols
+    # every (column x spec-slice x weight-slice) conversion is attempted
+    assert attempts == n_conversion_sites * enc.n_slices * len(spec_slicing)
+    assert 0 <= failures <= attempts
+    assert 0.0 <= float(stats.failure_rate) <= 1.0
+    # recovery bills `width` extra 1b converts per failed conversion
+    assert attempts <= converts <= attempts + max(spec_slicing) * failures
+    if failures == 0:
+        assert converts <= int(stats.no_spec_converts)
+    assert int(stats.recovery_saturations) >= 0
+    assert stats.cycles == len(spec_slicing) + sl.INPUT_BITS
+    assert stats.macs == BATCH * ROWS * COLS
