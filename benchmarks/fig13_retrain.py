@@ -14,7 +14,6 @@ import dataclasses
 import numpy as np
 
 from repro.core import energy as en
-from repro.core import mapping as mp
 from repro.core import workloads as wl
 
 

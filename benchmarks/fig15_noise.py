@@ -9,7 +9,6 @@ RAELLA's strategies hold accuracy to much higher noise."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import mlp_accuracy, pim_layer_fn, trained_mlp
 from repro.core import adaptive

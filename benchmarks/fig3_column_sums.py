@@ -7,14 +7,12 @@ reproducing the 17b -> 7b narrative (paper: <=7b rates 59.2% / 82.1% /
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import realistic_layer
 from repro.core import adc as adc_lib
 from repro.core import center_offset as co
 from repro.core import crossbar as xbar
-from repro.core import slicing as sl
 from repro.core import speculation as spec
 
 

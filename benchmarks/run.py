@@ -88,6 +88,12 @@ REGISTRY: dict[str, Entry] = {
                   f"({o['util_ratio']:.2f}x, floor 1.5x), bit-identical="
                   f"{o['bit_identical']}",
         smoke_kwargs=dict(n_groups=1)),
+    "compile_report": Entry(
+        "compile_report",
+        lambda o: f"{o['n_sites']} sites, slices {o['slice_histogram']}, "
+                  f"converts/MAC {o['converts_per_mac']}, "
+                  f"adc share {o['adc_energy_share']}",
+        smoke_kwargs=dict(arch="yi-6b", tokens=128, calib_len=6)),
     "serve_pim": Entry(
         "serve_pim",
         lambda o: f"pim fast decode "

@@ -2,10 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import slicing as sl
-
 
 def run() -> list[dict]:
     """2b input x 2b weight, every slicing combination (paper Table 1)."""

@@ -17,8 +17,6 @@ bias-free weights carry per-channel offsets (the paper's Fig. 5 regime):
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import mlp_accuracy, pim_layer_fn, trained_mlp
 from repro.core import adaptive

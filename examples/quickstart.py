@@ -8,7 +8,6 @@ speculative crossbar execution with a 7b ADC, and the TPU-native centered
 int8 fast path — comparing all of them against the float reference.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -4,7 +4,6 @@ the RAELLA fast path (centered int8, Eq. 1) on the same prompts.
   PYTHONPATH=src python examples/serve_quantized.py
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

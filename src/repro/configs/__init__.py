@@ -21,6 +21,12 @@ from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
 from repro.configs.chameleon_34b import CONFIG as CHAMELEON_34B
 from repro.configs.raella_bert_large import CONFIG as RAELLA_BERT_LARGE
 
+__all__ = [
+    "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
+    "ArchConfig", "InputShape", "REGISTRY", "ASSIGNED", "get",
+    "runnable_shapes",
+]
+
 REGISTRY: dict[str, ArchConfig] = {
     c.name: c for c in [
         PHI35_MOE, LLAMA4_MAVERICK, JAMBA_15_LARGE, QWEN15_110B, YI_6B,

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,16 +52,34 @@ class ArchConfig:
     # come from repro.models.pim.prepare_pim_params.
     pim_mode: str = "off"
     pim_use_pallas: bool = False       # fast path: Pallas kernel vs XLA ref
-    pim_weight_slicing: tuple[int, ...] = (4, 2, 2)
+    # Weight slicing fed to the compile step (repro.models.pim_compile):
+    # a tuple pins every projection site to that slicing; "adaptive" runs
+    # the paper's Algorithm 1 per site (per repeat-layer, per MoE expert,
+    # conservative 1b-per-slice lm_head). The compiled plan — not this
+    # knob — is what the dispatch path consumes.
+    pim_weight_slicing: tuple[int, ...] | str = (4, 2, 2)
     pim_speculation: bool = True       # exact path: dynamic input slicing
     pim_adc_bits: int = 24             # exact path ADC; 24b = lossless
                                        # (contract default), 7 = paper ADC
+    pim_search_adc_bits: int = 7       # ADC assumed by the Algorithm-1
+                                       # search (paper: the real 7b ADC,
+                                       # independent of pim_adc_bits)
 
     def __post_init__(self):
         if self.n_layers % len(self.block_pattern) != 0:
             raise ValueError(
                 f"{self.name}: n_layers {self.n_layers} not divisible by "
                 f"pattern length {len(self.block_pattern)}")
+        ws = self.pim_weight_slicing
+        if isinstance(ws, str):
+            if ws != "adaptive":
+                raise ValueError(
+                    f"{self.name}: pim_weight_slicing must be a slice-width "
+                    f"tuple or 'adaptive', got {ws!r}")
+        elif sum(ws) != 8 or any(not 1 <= b <= 4 for b in ws):
+            raise ValueError(
+                f"{self.name}: pim_weight_slicing {ws!r} must cover 8 weight "
+                "bits with 1..4b slices (paper: <=4b ReRAM devices)")
 
     @property
     def resolved_head_dim(self) -> int:

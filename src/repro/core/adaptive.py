@@ -9,11 +9,19 @@ and compare against the ideal 8b-quantized layer on nonzero expected outputs.
 
 The search is noise-aware: passing a noise level makes the chosen slicing
 automatically more conservative (Fig. 15's adaptivity claim).
+
+``find_best_slicing`` evaluates one slice-count group of candidates at a
+time and fetches the whole group's errors with a single host sync
+(``measure_errors``) — the per-site model compiler
+(``repro.models.pim_compile``) calls this once per projection site, so a
+``float()`` round-trip per candidate would serialize the entire compile on
+host<->device latency.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Sequence
 
 import jax
@@ -21,11 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adc as adc_lib
-from repro.core import center_offset as co
-from repro.core import crossbar as xbar
 from repro.core import pim_linear as pl
 from repro.core import slicing as sl
-from repro.quant import quantize as q
 
 ERROR_BUDGET = 0.09  # paper §4.2.1
 
@@ -38,14 +43,14 @@ class SlicingChoice:
     all_errors: dict  # slicing -> measured error (for the tried subset)
 
 
-def measure_error(w: jnp.ndarray, x_cal: jnp.ndarray,
-                  weight_slicing: Sequence[int], *,
-                  adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
-                  encode_mode: str = "center",
-                  noise_level: float = 0.0,
-                  key: jax.Array | None = None,
-                  relu_out: bool = False) -> float:
-    """Mean |8b-output error| on nonzero expected outputs (paper §4.2.1)."""
+def _error_value(w: jnp.ndarray, x_cal: jnp.ndarray,
+                 weight_slicing: Sequence[int], *,
+                 adc: adc_lib.ADCConfig,
+                 encode_mode: str,
+                 noise_level: float,
+                 key: jax.Array | None,
+                 relu_out: bool) -> jnp.ndarray:
+    """Device-side §4.2.1 error (scalar jnp array — no host sync)."""
     plan = pl.prepare(w, x_cal, weight_slicing=weight_slicing, adc=adc,
                       speculation=False, encode_mode=encode_mode,
                       relu_out=relu_out)
@@ -58,7 +63,42 @@ def measure_error(w: jnp.ndarray, x_cal: jnp.ndarray,
     nz = out_ref != 0
     err = jnp.abs(out_sim - out_ref).astype(jnp.float32)
     denom = jnp.maximum(nz.sum(), 1)
-    return float(jnp.where(nz, err, 0.0).sum() / denom)
+    return jnp.where(nz, err, 0.0).sum() / denom
+
+
+def measure_error(w: jnp.ndarray, x_cal: jnp.ndarray,
+                  weight_slicing: Sequence[int], *,
+                  adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+                  encode_mode: str = "center",
+                  noise_level: float = 0.0,
+                  key: jax.Array | None = None,
+                  relu_out: bool = False) -> float:
+    """Mean |8b-output error| on nonzero expected outputs (paper §4.2.1)."""
+    return float(_error_value(w, x_cal, weight_slicing, adc=adc,
+                              encode_mode=encode_mode,
+                              noise_level=noise_level, key=key,
+                              relu_out=relu_out))
+
+
+def measure_errors(w: jnp.ndarray, x_cal: jnp.ndarray,
+                   slicings: Sequence[Sequence[int]], *,
+                   adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
+                   encode_mode: str = "center",
+                   noise_level: float = 0.0,
+                   key: jax.Array | None = None,
+                   relu_out: bool = False) -> np.ndarray:
+    """``measure_error`` over many candidate slicings, one host sync total.
+
+    Every candidate's simulation is dispatched before any result is
+    fetched, so the device pipeline stays full instead of blocking on a
+    ``float()`` round-trip per candidate.
+    """
+    vals = [_error_value(w, x_cal, s, adc=adc, encode_mode=encode_mode,
+                         noise_level=noise_level, key=key, relu_out=relu_out)
+            for s in slicings]
+    if not vals:
+        return np.zeros((0,), np.float32)
+    return np.asarray(jax.device_get(vals), np.float32)
 
 
 def candidate_slicings(max_slices: int = 8,
@@ -91,34 +131,36 @@ def find_best_slicing(w: jnp.ndarray, x_cal: jnp.ndarray, *,
 
     last_layer=True forces the most conservative 1b-per-slice slicing
     (paper: the last layer has an outsized accuracy effect).
+
+    Candidates are evaluated a slice-count group at a time (fewest slices
+    first); the first group with an under-budget member wins, tie-broken by
+    lower error within the group. Each group is fetched with one host sync.
     """
+    kwargs = dict(adc=adc, encode_mode=encode_mode, noise_level=noise_level,
+                  key=key, relu_out=relu_out)
     if last_layer:
         s = (1,) * sl.WEIGHT_BITS
-        e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
-                          noise_level=noise_level, key=key, relu_out=relu_out)
+        e = measure_error(w, x_cal, s, **kwargs)
         return SlicingChoice(s, e, len(s), {s: e})
     errors: dict = {}
-    best = None
     cands = candidate_slicings(full_search=full_search)
-    cur_n = None
-    group_best: tuple[float, tuple[int, ...]] | None = None
-    for s in cands:
-        if cur_n is not None and len(s) != cur_n and group_best is not None:
-            break  # a smaller-slice-count group already satisfied the budget
-        cur_n = len(s)
-        e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
-                          noise_level=noise_level, key=key, relu_out=relu_out)
+    for _, group in itertools.groupby(cands, key=len):
+        group = tuple(group)
+        errs = measure_errors(w, x_cal, group, **kwargs)
+        best: tuple[float, tuple[int, ...]] | None = None
+        for s, e in zip(group, errs):
+            errors[s] = float(e)
+            if e < error_budget and (best is None or e < best[0]):
+                best = (float(e), s)
+        if best is not None:
+            e, s = best
+            return SlicingChoice(slicing=s, error=e, n_slices=len(s),
+                                 all_errors=errors)
+    # nothing under budget: fall back to the most conservative slicing
+    s = (1,) * sl.WEIGHT_BITS
+    e = errors.get(s)
+    if e is None:
+        e = measure_error(w, x_cal, s, **kwargs)
         errors[s] = e
-        if e < error_budget and (group_best is None or e < group_best[0]):
-            group_best = (e, s)
-    if group_best is None:
-        # nothing under budget: fall back to the most conservative slicing
-        s = (1,) * sl.WEIGHT_BITS
-        e = errors.get(s)
-        if e is None:
-            e = measure_error(w, x_cal, s, adc=adc, encode_mode=encode_mode,
-                              noise_level=noise_level, key=key, relu_out=relu_out)
-            errors[s] = e
-        group_best = (e, s)
-    e, s = group_best
-    return SlicingChoice(slicing=s, error=e, n_slices=len(s), all_errors=errors)
+    return SlicingChoice(slicing=s, error=e, n_slices=len(s),
+                         all_errors=errors)

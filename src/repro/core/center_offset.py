@@ -24,7 +24,6 @@ import dataclasses
 import functools
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -89,14 +88,18 @@ class EncodedWeights:
     """
     planes: np.ndarray
     centers: np.ndarray
-    slicing: tuple[int, ...]
+    slicing: tuple[int, ...] | None
     shifts: tuple[int, ...]
     rows: int
     rows_per_xbar: int = ROWS_PER_CROSSBAR
 
     @property
     def n_slices(self) -> int:
-        return len(self.slicing)
+        # derived from the planes (not ``len(self.slicing)``): per-site
+        # compiled plans pad the slice axis to a common max, with zeroed
+        # padding planes and ``shifts`` as a (possibly traced) int32 array —
+        # ``slicing`` is None there (repro.models.pim_compile).
+        return int(self.planes.shape[0])
 
     @property
     def n_segments(self) -> int:

@@ -24,7 +24,6 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import adc as adc_lib
 from repro.core import center_offset as co
@@ -76,6 +75,16 @@ def forward(x_u8: jnp.ndarray,
 
     x_u8: (B, rows) unsigned 8b inputs. Returns (psum int32 (B, cols), stats).
     ``ideal=True`` skips the ADC entirely (infinite-resolution reference).
+
+    ``enc`` may carry *padded* slice planes (per-site compiled plans pad the
+    slice axis to a common max): all-zero padding planes convert to 0 at the
+    signed ADC and contribute nothing, so the loop below is correct without
+    a mask; ``enc.shifts`` may then be a traced int32 array rather than a
+    static tuple (the shift applied to a zero value is irrelevant). The
+    work *stats*, however, count every plane — convert counts are only
+    meaningful for unpadded encodings (the energy/accounting harnesses all
+    build those); use ``repro.models.pim_compile.CompiledPim.report`` for
+    per-site convert pricing of padded plans.
     """
     B = x_u8.shape[0]
     n_seg, R = enc.n_segments, enc.rows_per_xbar

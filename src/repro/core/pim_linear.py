@@ -43,7 +43,7 @@ class PimPlan:
     enc: co.EncodedWeights          # Center+Offset encoded weight slices
     lq: q.LayerQuant                # quantization parameters
     w_q: np.ndarray                 # int8 weights (rows, cols) — reference path
-    weight_slicing: tuple[int, ...]
+    weight_slicing: tuple[int, ...] | None  # None: per-site (enc carries shifts)
     adc: adc_lib.ADCConfig
     speculation: bool
     spec_slicing: tuple[int, ...] = spec.SPEC_SLICING

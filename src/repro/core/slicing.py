@@ -15,7 +15,6 @@ import functools
 from typing import Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
 WEIGHT_BITS = 8
 INPUT_BITS = 8

@@ -52,7 +52,12 @@ def forward(x_u8: jnp.ndarray,
             *,
             noise_level: float = 0.0,
             key: jax.Array | None = None) -> tuple[jnp.ndarray, SpeculationStats]:
-    """Speculative crossbar forward. x_u8: (B, rows) -> (psum (B, cols), stats)."""
+    """Speculative crossbar forward. x_u8: (B, rows) -> (psum (B, cols), stats).
+
+    Padded slice planes (see ``crossbar.forward``) are numerically inert
+    but still counted by the work stats — convert/cycle accounting is only
+    meaningful for unpadded encodings.
+    """
     B = x_u8.shape[0]
     n_seg, R = enc.n_segments, enc.rows_per_xbar
     xs = xbar._segment_inputs(x_u8, n_seg, R)

@@ -1,5 +1,7 @@
-from repro.data.pipeline import (  # noqa: F401
+from repro.data.pipeline import (
     SyntheticLM,
     TeacherDataset,
     batch_iterator,
 )
+
+__all__ = ["SyntheticLM", "TeacherDataset", "batch_iterator"]

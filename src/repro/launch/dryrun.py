@@ -23,7 +23,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -6,12 +6,17 @@
 ``--engine continuous`` (default) drives the slot-based scheduler on a
 mixed-length request trace and reports decode-step utilization next to
 throughput; ``--engine lockstep`` runs the fixed-batch reference engine.
-``--pim fast`` compiles the params with
-``repro.models.pim.prepare_pim_params`` (on a random calibration batch)
+``--pim fast`` compiles the params with the per-site architecture
+compiler (``repro.models.pim_compile``, on a random calibration batch)
 and routes every weight-static projection through the centered int8 path
 (Eq. 1 on the MXU); ``--pim exact`` runs the bit-exact accelerator
 simulation, ``--pim int8`` the ideal 8b-quantized reference — see
 ``benchmarks/serve_pim.py`` for the throughput comparison.
+``--pim-slicing adaptive`` runs the paper's Algorithm 1 per projection
+site (printing the slice-count histogram and per-site table);
+``--pim-slicing 4,2,2`` pins every site. See
+``benchmarks/compile_report.py`` for the Titanium-Law pricing of the
+compiled plan.
 """
 
 from __future__ import annotations
@@ -60,6 +65,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--pim", choices=("off", "fast", "exact", "int8"),
                     default="off")
+    ap.add_argument("--pim-slicing", default=None,
+                    help="'adaptive' (Algorithm 1 per projection site) or "
+                         "a comma tuple like '4,2,2' pinning every site")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -67,6 +75,13 @@ def main() -> None:
         cfg = cfg.reduced()
     if args.pim != cfg.pim_mode:
         cfg = dataclasses.replace(cfg, pim_mode=args.pim)
+    if args.pim_slicing is not None:
+        if cfg.pim_mode == "off":
+            ap.error("--pim-slicing requires --pim fast|exact|int8 "
+                     "(the float path has no compile step)")
+        slicing = args.pim_slicing if args.pim_slicing == "adaptive" \
+            else tuple(int(b) for b in args.pim_slicing.split(","))
+        cfg = dataclasses.replace(cfg, pim_weight_slicing=slicing)
     params, _ = T.init_params(cfg, jax.random.key(0))
     max_len = args.prompt_len + args.steps + 1
 
@@ -76,9 +91,17 @@ def main() -> None:
             jax.random.key(7), (2, max(args.prompt_len, 4)), 0,
             cfg.vocab_size))
         t0 = time.monotonic()
-        plans, _ = pim.prepare_pim_params(params, cfg, calib)
-        print(f"compiled pim plans ({cfg.pim_mode}) in "
-              f"{time.monotonic() - t0:.2f}s")
+        compiled = pim.compile_pim_params(params, cfg, calib)
+        plans = compiled.plans
+        print(f"compiled pim plans ({cfg.pim_mode}, "
+              f"slicing={cfg.pim_weight_slicing}) in "
+              f"{time.monotonic() - t0:.2f}s: {len(compiled.sites)} sites, "
+              f"slice histogram {compiled.slice_histogram()}")
+        if cfg.pim_weight_slicing == "adaptive":
+            for sp in compiled.sites:
+                err = "-" if sp.error is None else f"{sp.error:.4f}"
+                print(f"  {sp.site:36s} {'-'.join(map(str, sp.slicing)):16s}"
+                      f" err={err}")
 
     if args.engine == "lockstep":
         eng = ServeEngine(cfg, params, max_len=max_len,

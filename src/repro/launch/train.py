@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro import configs
 from repro.data.pipeline import SyntheticLM

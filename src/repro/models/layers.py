@@ -12,10 +12,7 @@ experts sharded over the model axis.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +22,6 @@ from repro.configs.base import ArchConfig
 from repro.core import adc as adc_lib
 from repro.core import center_offset as co
 from repro.core import pim_linear
-from repro.core import slicing as slc
 from repro.dist import shard
 from repro.quant import quantize as quantlib
 
@@ -54,10 +50,13 @@ def _plan_to_pim_plan(plan: dict, cfg: ArchConfig, rows: int) -> pim_linear.PimP
     """Rebuild a ``pim_linear.PimPlan`` from a plan-leaf dict + static cfg.
 
     Plan leaves carry only arrays (so they ride ``lax.scan`` / ``vmap``
-    over the stacked block axis); everything static — slicing, ADC,
-    speculation — is reconstructed from ``cfg`` here.
+    over the stacked block axis). The weight slicing is *per site*: exact
+    plan leaves carry their own ``slice_shifts`` / ``slice_valid`` tables
+    (padded to the site's max slice count by the compiler —
+    ``repro.models.pim_compile``); ``cfg.pim_weight_slicing`` is never
+    read here. Truly global statics — ADC resolution, speculation — are
+    reconstructed from ``cfg``.
     """
-    slicing = tuple(cfg.pim_weight_slicing)
     lq = quantlib.LayerQuant(
         w_scale=plan["w_scale"], x_scale=plan["x_scale"],
         x_zero_point=jnp.asarray(0, jnp.int32), x_signed=True,
@@ -65,13 +64,17 @@ def _plan_to_pim_plan(plan: dict, cfg: ArchConfig, rows: int) -> pim_linear.PimP
         out_zero_point=jnp.asarray(0, jnp.int32), bias=None)
     enc = None
     if "planes" in plan:
+        # zero padded slice planes so correctness never depends on what the
+        # compiler stored beyond each instance's true slice count
+        valid = plan["slice_valid"]
+        planes = plan["planes"] * valid[:, None, None, None].astype(
+            plan["planes"].dtype)
         enc = co.EncodedWeights(
-            planes=plan["planes"], centers=plan["enc_centers"],
-            slicing=slicing,
-            shifts=slc.slice_shifts(slicing, slc.WEIGHT_BITS),
+            planes=planes, centers=plan["enc_centers"],
+            slicing=None, shifts=plan["slice_shifts"].astype(jnp.int32),
             rows=rows, rows_per_xbar=co.ROWS_PER_CROSSBAR)
     return pim_linear.PimPlan(
-        enc=enc, lq=lq, w_q=plan["w_q"], weight_slicing=slicing,
+        enc=enc, lq=lq, w_q=plan["w_q"], weight_slicing=None,
         adc=adc_lib.ADCConfig(bits=cfg.pim_adc_bits, signed=True),
         speculation=cfg.pim_speculation,
         fast_w_off=plan.get("w_off"), fast_centers=plan.get("centers"),

@@ -1,32 +1,25 @@
-"""PIM-backed model execution: the paper's compile step for whole LMs.
+"""PIM-backed model execution: the compile-step facade for whole LMs.
 
-``prepare_pim_params(params, cfg, calib_tokens)`` runs Algorithm 1 once
-per weight-static projection (qkv/o, dense FFN, MoE experts, mamba
-in/x/out, lm_head) and returns a *plan pytree* that rides alongside the
-params through ``forward`` / ``prefill`` / ``prefill_chunk`` /
-``decode_step`` — the layer scans carry the stacked plans next to the
-stacked params, and ``repro.models.layers.pim_matmul`` dispatches each
-projection through ``cfg.pim_mode`` (see that docstring for the modes).
+The actual compiler lives in ``repro.models.pim_compile``: it runs the
+paper's Algorithm 1 once per *projection site* (per pattern position, per
+repeat, per MoE expert, plus the LM head) and returns a
+:class:`~repro.models.pim_compile.CompiledPim` — the plan pytree that rides
+the layer scans next to the params, the matching logical sharding specs,
+and the per-site :class:`~repro.models.pim_compile.SitePlan` architecture
+table (chosen slicing, measured error, energy report).
 
-The compile step has two phases:
+``prepare_pim_params(params, cfg, calib_tokens)`` is the stable 2-tuple
+surface the serve engines and launchers consume: ``(plans, specs)``. Use
+``pim_compile.compile_pim_params`` directly when you also want the site
+table (e.g. to print the slicing histogram or the Titanium-Law report).
 
-1. *capture* — an eager, unrolled float forward over the calibration
-   tokens with ``PimTap`` recorders standing in for plan leaves, so each
-   projection is calibrated on exactly the activations the real forward
-   feeds it (per repeat, per expert);
-2. *prepare* — for ``fast``/``int8``, ``quant.calibrate_layer`` +
-   ``quant.quantize_weights_centered`` vmapped over the ``lax.scan``-
-   stacked repeat axis (and the expert axis for MoE); for ``exact``,
-   ``pim_linear.prepare`` (Center+Offset encode via Eq. 2) per layer —
-   the numpy center search cannot vmap, and exact mode is small-models-
-   only by contract.
-
-Plan leaves are plain dicts of arrays (scan/vmap-friendly); everything
-static — weight slicing, ADC resolution, speculation — lives on
-``ArchConfig`` (``pim_*`` fields) and is rebuilt at dispatch time.
-``plan_specs`` mirrors the plan pytree with logical sharding axes so the
-int8 offset planes keep the same ``dist`` layout as the float weights
-they replace.
+Plan leaves are plain dicts of arrays (scan/vmap-friendly). Per-site
+decisions — weight slicing above all — ride *inside* the plan leaves
+(``slice_shifts`` + ``slice_valid`` padded to the site's max slice count);
+``cfg.pim_weight_slicing`` is only an input to the compile step, never read
+at dispatch time. Truly global statics (ADC resolution, speculation) stay
+on ``ArchConfig`` and are rebuilt at dispatch by
+``repro.models.layers.pim_matmul``.
 
 rwkv blocks stay float: their time-mix path is dominated by token-shift
 lerps and the LoRA decay (not crossbar-shaped static matmuls); plan
@@ -36,100 +29,16 @@ pytree.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ArchConfig
-from repro.core import adc as adc_lib
-from repro.core import pim_linear
-from repro.models import layers as L
-from repro.models import transformer as T
-from repro.quant import quantize as q
+from repro.models.pim_compile import (
+    CompiledPim,
+    SitePlan,
+    compile_pim_params,
+    plan_specs,
+)
 
-_CORE_PROJ = {
-    "attn": ("wq", "wk", "wv", "wo"),
-    "mamba": ("in_proj", "x_proj", "out_proj"),
-}
-_FFN_PROJ = ("w1", "w3", "w2")
-
-
-def _block_projections(cfg: ArchConfig, i: int) -> dict | None:
-    """Weight-static projection names for pattern position ``i`` (grouped
-    by param subtree), or None for rwkv (float path)."""
-    kind = cfg.block_pattern[i]
-    if kind not in _CORE_PROJ:
-        return None
-    return {"core": _CORE_PROJ[kind], "ffn": _FFN_PROJ}
-
-
-def _build_taps(cfg: ArchConfig) -> dict:
-    blocks = []
-    for i in range(len(cfg.block_pattern)):
-        paths = _block_projections(cfg, i)
-        if paths is None:
-            blocks.append(None)
-            continue
-        blocks.append({g: {n: L.PimTap() for n in names}
-                       for g, names in paths.items()})
-    return {"embed": {"head": L.PimTap()}, "blocks": blocks}
-
-
-def _capture(params: dict, cfg: ArchConfig, calib_tokens, taps: dict) -> None:
-    """Eager float forward that feeds every tap its projection inputs.
-
-    Unrolled over repeats (no ``lax.scan``) so the taps see concrete
-    per-repeat values rather than tracers.
-    """
-    x = T.embed_inputs(params, cfg, jnp.asarray(calib_tokens))
-    B, S = x.shape[0], x.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    for r in range(cfg.n_repeats):
-        for i, kind in enumerate(cfg.block_pattern):
-            bp = jax.tree.map(lambda a, _r=r: a[_r], params["blocks"][i])
-            x = T._apply_block(kind, i, bp, cfg, x, positions,
-                               plan=taps["blocks"][i])
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    L.lm_head(params["embed"], cfg, x, plan=taps["embed"]["head"])
-
-
-def _fast_prepare_2d(w: jnp.ndarray, x_cal: jnp.ndarray) -> dict:
-    """One layer's fast-path plan: symmetric per-channel int8 (the
-    reference quantizer) + centered asymmetric int8 (Eq. 1 operands)."""
-    w = w.astype(jnp.float32)
-    lq, w_q = q.calibrate_layer(w, x_cal, signed_inputs=True)
-    w_off, centers, scale = q.quantize_weights_centered(w)
-    return {"w_off": w_off, "centers": centers, "scale": scale,
-            "w_q": w_q, "w_scale": lq.w_scale, "x_scale": lq.x_scale}
-
-
-def _exact_prepare_2d(w, x_cal, cfg: ArchConfig) -> dict:
-    plan = pim_linear.prepare(
-        jnp.asarray(w, jnp.float32), jnp.asarray(x_cal),
-        weight_slicing=cfg.pim_weight_slicing,
-        adc=adc_lib.ADCConfig(bits=cfg.pim_adc_bits, signed=True),
-        speculation=cfg.pim_speculation, signed_inputs=True)
-    return {"planes": jnp.asarray(plan.enc.planes),
-            "enc_centers": jnp.asarray(plan.enc.centers),
-            "w_q": jnp.asarray(plan.w_q),
-            "w_scale": jnp.asarray(plan.lq.w_scale),
-            "x_scale": jnp.asarray(plan.lq.x_scale)}
-
-
-def _prepare_site(w, x_cal, cfg: ArchConfig, stack_dims: int) -> dict:
-    """Compile one projection site. ``stack_dims`` leading axes of ``w``
-    and ``x_cal`` are mapped over (0: lm_head, 1: repeats, 2: repeats x
-    experts)."""
-    if cfg.pim_mode in ("fast", "int8"):
-        fn = _fast_prepare_2d
-        for _ in range(stack_dims):
-            fn = jax.vmap(fn)
-        return fn(jnp.asarray(w, jnp.float32), jnp.asarray(x_cal))
-    if stack_dims == 0:
-        return _exact_prepare_2d(w, x_cal, cfg)
-    subs = [_prepare_site(w[r], x_cal[r], cfg, stack_dims - 1)
-            for r in range(w.shape[0])]
-    return jax.tree.map(lambda *a: jnp.stack(a), *subs)
+__all__ = ["CompiledPim", "SitePlan", "compile_pim_params",
+           "plan_specs", "prepare_pim_params"]
 
 
 def prepare_pim_params(params: dict, cfg: ArchConfig,
@@ -137,75 +46,15 @@ def prepare_pim_params(params: dict, cfg: ArchConfig,
     """Compile ``params`` into a PIM plan pytree for ``cfg.pim_mode``.
 
     calib_tokens: (B, S) int32 token ids (or (B, S, D) embeds for
-    embedding-mode archs) used for activation-range calibration.
-    Returns ``(plans, specs)``: ``plans`` mirrors the consuming call
-    signature (``plans["blocks"][i]`` rides the layer scans,
-    ``plans["embed"]["head"]`` the LM head); ``specs`` holds logical
-    sharding axes per leaf (``plan_specs``). Mode 'off' returns
+    embedding-mode archs) used for activation-range calibration and — with
+    ``cfg.pim_weight_slicing == "adaptive"`` — the per-site Algorithm-1
+    slicing search. Returns ``(plans, specs)``: ``plans`` mirrors the
+    consuming call signature (``plans["blocks"][i]`` rides the layer
+    scans, ``plans["embed"]["head"]`` the LM head); ``specs`` holds
+    logical sharding axes per leaf (``plan_specs``). Mode 'off' returns
     ``(None, None)`` — the float path needs no compile step.
     """
-    if cfg.pim_mode == "off":
+    compiled = compile_pim_params(params, cfg, calib_tokens)
+    if compiled is None:
         return None, None
-    if cfg.pim_mode not in ("fast", "exact", "int8"):
-        raise ValueError(f"unknown pim_mode {cfg.pim_mode!r}")
-    taps = _build_taps(cfg)
-    _capture(params, cfg, calib_tokens, taps)
-
-    blocks = []
-    for i in range(len(cfg.block_pattern)):
-        paths = _block_projections(cfg, i)
-        if paths is None:
-            blocks.append(None)
-            continue
-        bplan = {}
-        for group, names in paths.items():
-            expert = group == "ffn" and cfg.moe_layer(i)
-            bplan[group] = {}
-            for name in names:
-                tap = taps["blocks"][i][group][name]
-                x_cal = np.stack(tap.x)  # (n_repeats, [E,] N, d_in)
-                bplan[group][name] = _prepare_site(
-                    params["blocks"][i][group][name], x_cal, cfg,
-                    stack_dims=2 if expert else 1)
-        blocks.append(bplan)
-    head = _prepare_site(params["embed"]["head"],
-                         taps["embed"]["head"].x[0], cfg, stack_dims=0)
-    return {"embed": {"head": head}, "blocks": blocks}, plan_specs(cfg)
-
-
-# ------------------------------------------------------------------ specs
-def _site_specs(ws: tuple, mode: str) -> dict:
-    """Plan-leaf logical axes derived from one weight's spec tuple.
-
-    ``ws`` ends with (in_axis, out_axis); leading entries are stack axes
-    (repeat ``None`` and/or ``experts``). The int8 offset planes keep the
-    float weight's layout; per-column terms keep the output axis.
-    """
-    lead, out_ax = ws[:-2], ws[-1]
-    common = {"w_q": ws, "w_scale": lead + (out_ax,), "x_scale": lead}
-    if mode in ("fast", "int8"):
-        return dict(common, w_off=ws, centers=lead + (out_ax,),
-                    scale=lead + (out_ax,))
-    # exact: planes (n_slices, n_seg, rows_per_xbar, cols) per layer
-    return dict(common, planes=lead + (None, None, None, out_ax),
-                enc_centers=lead + (None, out_ax))
-
-
-def plan_specs(cfg: ArchConfig) -> dict | None:
-    """Logical sharding axes mirroring ``prepare_pim_params``'s plans."""
-    if cfg.pim_mode == "off":
-        return None
-    pspecs = T.param_specs(cfg)
-    blocks = []
-    for i in range(len(cfg.block_pattern)):
-        paths = _block_projections(cfg, i)
-        if paths is None:
-            blocks.append(None)
-            continue
-        blocks.append({
-            g: {n: _site_specs(tuple(pspecs["blocks"][i][g][n]),
-                               cfg.pim_mode)
-                for n in names}
-            for g, names in paths.items()})
-    head = _site_specs(tuple(pspecs["embed"]["head"]), cfg.pim_mode)
-    return {"embed": {"head": head}, "blocks": blocks}
+    return compiled.plans, compiled.specs

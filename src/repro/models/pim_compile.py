@@ -1,0 +1,405 @@
+"""Per-site PIM architecture compiler (the paper's Algorithm 1, per site).
+
+RAELLA "adapts the architecture to each DNN": Algorithm 1 (§4.2) picks a
+weight slicing *per layer* by measuring quantization error on calibration
+inputs. This module is that compile step for whole LMs — one *projection
+site* per weight-static matmul instance (per pattern position, per repeat,
+per MoE expert, plus the LM head), each with its own slicing decision:
+
+1. *capture* — an eager, unrolled float forward over the calibration
+   tokens with ``PimTap`` recorders standing in for plan leaves, so each
+   site is calibrated on exactly the activations the real forward feeds it;
+2. *plan* — with ``cfg.pim_weight_slicing == "adaptive"``,
+   ``core.adaptive.find_best_slicing`` runs per site under the paper's
+   search ADC (``cfg.pim_search_adc_bits``, default the real 7b ADC), with
+   the last-layer conservative 1b-per-slice override for ``lm_head``; a
+   tuple pins every site to that slicing (the pre-compiler behavior);
+3. *prepare* — for ``fast``/``int8``, ``quant.calibrate_layer`` +
+   ``quant.quantize_weights_centered`` vmapped over all site instances at
+   once; for ``exact``, instances are grouped by chosen slicing and each
+   group is Center+Offset encoded in a single ``co.encode`` call with the
+   instances folded into the column axis (Eq. 2 centers are per-column, so
+   this is exact) — compile work scales with distinct (shape, slicing)
+   groups, not with layer count.
+
+Because chosen slicings are ragged across the instances stacked into one
+scan/vmap leaf, exact-mode planes are padded to the site's max slice count:
+``slice_shifts`` (int32) carries each instance's recombination shifts and
+``slice_valid`` masks the padding (padded planes are zeroed; a zero plane
+converts to 0 at the signed ADC, so padding is a numerical no-op).
+
+The result is a :class:`CompiledPim`: the plan pytree + sharding specs the
+serve engines consume, and a :class:`SitePlan` table (chosen slicing,
+measured §4.2.1 error, search ADC bits) whose :meth:`CompiledPim.report`
+prices every site with the §2.5 Titanium-Law energy model (converts/MAC,
+ADC energy share, slice-count histogram) — see ``benchmarks/compile_report``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import adaptive as ad
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import energy as en
+from repro.core import mapping as mp
+from repro.core import slicing as slc
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.quant import quantize as q
+
+_CORE_PROJ = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mamba": ("in_proj", "x_proj", "out_proj"),
+}
+_FFN_PROJ = ("w1", "w3", "w2")
+
+SEARCH_ROWS = 16  # calibration rows fed to Algorithm 1 (paper: ~10 inputs)
+CONSERVATIVE_SLICING = (1,) * slc.WEIGHT_BITS
+
+
+# ------------------------------------------------------------------ site table
+@dataclasses.dataclass(frozen=True)
+class SitePlan:
+    """One projection-site instance's compiled architecture decision."""
+    site: str                  # e.g. "blocks[0].core.wq[r1]", "embed.head"
+    d_in: int
+    d_out: int
+    slicing: tuple[int, ...]
+    error: float | None        # measured §4.2.1 error (None: pinned slicing)
+    search_adc_bits: int
+    last_layer: bool = False
+
+    @property
+    def n_slices(self) -> int:
+        return len(self.slicing)
+
+
+@dataclasses.dataclass
+class CompiledPim:
+    """Plan pytree + specs + the per-site architecture table."""
+    cfg: ArchConfig
+    plans: dict
+    specs: dict
+    sites: tuple[SitePlan, ...]
+
+    def site(self, name: str) -> SitePlan:
+        for s in self.sites:
+            if s.site == name:
+                return s
+        raise KeyError(name)
+
+    def distinct_slicings(self) -> tuple[tuple[int, ...], ...]:
+        return tuple(sorted({s.slicing for s in self.sites}))
+
+    def slice_histogram(self) -> dict[int, int]:
+        hist: dict[int, int] = {}
+        for s in self.sites:
+            hist[s.n_slices] = hist.get(s.n_slices, 0) + 1
+        return dict(sorted(hist.items()))
+
+    def report(self, tokens: int = 4096) -> dict:
+        """Price every site with the §2.5 energy model (JSON-serializable).
+
+        Each site is mapped onto RAELLA silicon with *its own* slice count
+        (``bits_per_weight_slice = 8 / n_slices``); speculation follows
+        ``cfg.pim_speculation``. Reported per site: converts/MAC, ADC
+        energy, total energy, ADC share — plus whole-model aggregates and
+        the slice-count histogram (the paper's Fig. 7 x Fig. 12 story).
+        """
+        spec = 3 if self.cfg.pim_speculation else 0
+        rows = []
+        tot_converts = tot_macs = 0.0
+        tot_adc = tot_energy = 0.0
+        for sp in self.sites:
+            shape = mp.LayerShape(
+                name=sp.site, filter_len=sp.d_in, n_filters=sp.d_out,
+                n_positions=tokens, signed_inputs=True,
+                last_layer=sp.last_layer, row_positions=tokens)
+            arch = dataclasses.replace(
+                en.RAELLA, name=f"raella-{sp.n_slices}s",
+                n_weight_slices=sp.n_slices,
+                bits_per_weight_slice=slc.WEIGHT_BITS / sp.n_slices,
+                spec_slices=spec, adaptive_slicing=False)
+            r = en.analyze_layer(arch, shape)
+            rows.append({
+                "site": sp.site,
+                "slicing": list(sp.slicing),
+                "n_slices": sp.n_slices,
+                "error": None if sp.error is None else round(sp.error, 4),
+                "converts_per_mac": round(r.converts_per_mac, 4),
+                "adc_energy_pj": round(r.e_adc, 1),
+                "energy_pj": round(r.energy, 1),
+                "adc_share": round(r.e_adc / r.energy, 3),
+            })
+            tot_converts += r.converts
+            tot_macs += shape.macs
+            tot_adc += r.e_adc
+            tot_energy += r.energy
+        return {
+            "arch": self.cfg.name,
+            "pim_mode": self.cfg.pim_mode,
+            "slicing": ("adaptive"
+                        if self.cfg.pim_weight_slicing == "adaptive"
+                        else list(self.cfg.pim_weight_slicing)),
+            "n_sites": len(self.sites),
+            "distinct_slicings": ["-".join(map(str, s))
+                                  for s in self.distinct_slicings()],
+            "slice_histogram": {str(k): v
+                                for k, v in self.slice_histogram().items()},
+            "converts_per_mac": round(tot_converts / max(tot_macs, 1), 4),
+            "adc_energy_share": round(tot_adc / max(tot_energy, 1e-9), 3),
+            "energy_uj": round(tot_energy / 1e6, 2),
+            "sites": rows,
+        }
+
+
+# ------------------------------------------------------------------ capture
+def _block_projections(cfg: ArchConfig, i: int) -> dict | None:
+    """Weight-static projection names for pattern position ``i`` (grouped
+    by param subtree), or None for rwkv (float path)."""
+    kind = cfg.block_pattern[i]
+    if kind not in _CORE_PROJ:
+        return None
+    return {"core": _CORE_PROJ[kind], "ffn": _FFN_PROJ}
+
+
+def _build_taps(cfg: ArchConfig) -> dict:
+    blocks = []
+    for i in range(len(cfg.block_pattern)):
+        paths = _block_projections(cfg, i)
+        if paths is None:
+            blocks.append(None)
+            continue
+        blocks.append({g: {n: L.PimTap() for n in names}
+                       for g, names in paths.items()})
+    return {"embed": {"head": L.PimTap()}, "blocks": blocks}
+
+
+def _capture(params: dict, cfg: ArchConfig, calib_tokens, taps: dict) -> None:
+    """Eager float forward that feeds every tap its projection inputs.
+
+    Unrolled over repeats (no ``lax.scan``) so the taps see concrete
+    per-repeat values rather than tracers.
+    """
+    x = T.embed_inputs(params, cfg, jnp.asarray(calib_tokens))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    for r in range(cfg.n_repeats):
+        for i, kind in enumerate(cfg.block_pattern):
+            bp = jax.tree.map(lambda a, _r=r: a[_r], params["blocks"][i])
+            x = T._apply_block(kind, i, bp, cfg, x, positions,
+                               plan=taps["blocks"][i])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    L.lm_head(params["embed"], cfg, x, plan=taps["embed"]["head"])
+
+
+# ------------------------------------------------------------------ slicing
+def _site_slicings(wf: jnp.ndarray, xf: jnp.ndarray, cfg: ArchConfig,
+                   last_layer: bool) -> tuple[list, list]:
+    """Per-instance (slicing, error) for one site's flattened stack.
+
+    wf: (K, d_in, d_out); xf: (K, N, d_in). Adaptive mode runs Algorithm 1
+    per instance on a row subsample under the search ADC; tuple mode pins
+    every instance (error None — nothing was measured).
+    """
+    K = wf.shape[0]
+    if cfg.pim_weight_slicing != "adaptive":
+        s = tuple(cfg.pim_weight_slicing)
+        return [s] * K, [None] * K
+    adc = adc_lib.ADCConfig(bits=cfg.pim_search_adc_bits, signed=True)
+    slicings, errors = [], []
+    for k in range(K):
+        choice = ad.find_best_slicing(
+            wf[k], xf[k][:SEARCH_ROWS], adc=adc, last_layer=last_layer)
+        slicings.append(choice.slicing)
+        errors.append(choice.error)
+    return slicings, errors
+
+
+# ------------------------------------------------------------------ prepare
+def _fast_prepare_2d(w: jnp.ndarray, x_cal: jnp.ndarray) -> dict:
+    """One layer's fast-path plan: symmetric per-channel int8 (the
+    reference quantizer) + centered asymmetric int8 (Eq. 1 operands)."""
+    w = w.astype(jnp.float32)
+    lq, w_q = q.calibrate_layer(w, x_cal, signed_inputs=True)
+    w_off, centers, scale = q.quantize_weights_centered(w)
+    return {"w_off": w_off, "centers": centers, "scale": scale,
+            "w_q": w_q, "w_scale": lq.w_scale, "x_scale": lq.x_scale}
+
+
+def _ref_quant_2d(w: jnp.ndarray, x_cal: jnp.ndarray) -> dict:
+    """Exact-mode reference quantization (the jax-traceable part)."""
+    lq, w_q = q.calibrate_layer(w, x_cal, signed_inputs=True)
+    return {"w_q": w_q, "w_scale": lq.w_scale, "x_scale": lq.x_scale}
+
+
+def _exact_prepare_stacked(wf: jnp.ndarray, xf: jnp.ndarray,
+                           slicings: list) -> dict:
+    """Exact-mode plan leaves for one site's flattened stack.
+
+    wf: (K, R, C) float; xf: (K, N, R); slicings: K tuples, possibly
+    ragged. Instances are grouped by slicing; each group's Center+Offset
+    encode folds the group into the column axis so the numpy Eq. 2 center
+    search runs once per group (per-column centers make this exact), then
+    planes are padded to the site's max slice count with ``slice_valid``
+    masks and ``slice_shifts`` recombination shifts.
+    """
+    K, R, C = wf.shape
+    qd = jax.vmap(_ref_quant_2d)(wf, xf)  # one trace for all instances
+    w_u = np.asarray(qd["w_q"], np.int64) + 128  # unsigned crossbar domain
+    n_max = max(len(s) for s in slicings)
+    n_seg = -(-R // co.ROWS_PER_CROSSBAR)
+    rx = co.ROWS_PER_CROSSBAR
+    planes = np.zeros((K, n_max, n_seg, rx, C), np.int8)
+    centers = np.zeros((K, n_seg, C), np.int32)
+    shifts = np.zeros((K, n_max), np.int32)
+    valid = np.zeros((K, n_max), bool)
+    groups: dict[tuple, list[int]] = {}
+    for k, s in enumerate(slicings):
+        groups.setdefault(tuple(s), []).append(k)
+    for s, ks in groups.items():
+        kg = len(ks)
+        folded = np.moveaxis(w_u[ks], 0, 1).reshape(R, kg * C)
+        enc = co.encode(folded, s)
+        n_s = len(s)
+        pl = np.asarray(enc.planes).reshape(n_s, n_seg, rx, kg, C)
+        ce = np.asarray(enc.centers).reshape(n_seg, kg, C)
+        for j, k in enumerate(ks):
+            planes[k, :n_s] = pl[:, :, :, j]
+            centers[k] = ce[:, j]
+            shifts[k, :n_s] = enc.shifts
+            valid[k, :n_s] = True
+    return {"planes": jnp.asarray(planes),
+            "enc_centers": jnp.asarray(centers),
+            "slice_shifts": jnp.asarray(shifts),
+            "slice_valid": jnp.asarray(valid),
+            "w_q": qd["w_q"], "w_scale": qd["w_scale"],
+            "x_scale": qd["x_scale"]}
+
+
+def _compile_site(name: str, w, x_cal, cfg: ArchConfig, stack_dims: int,
+                  last_layer: bool = False) -> tuple[dict, list[SitePlan]]:
+    """Compile one projection site. ``stack_dims`` leading axes of ``w``
+    and ``x_cal`` are instance axes (0: lm_head, 1: repeats, 2: repeats x
+    experts); every instance gets its own Algorithm-1 decision."""
+    w = jnp.asarray(w, jnp.float32)
+    x_cal = jnp.asarray(x_cal, jnp.float32)
+    lead = w.shape[:stack_dims]
+    K = int(np.prod(lead)) if stack_dims else 1
+    wf = w.reshape((K,) + w.shape[stack_dims:])
+    xf = x_cal.reshape((K,) + x_cal.shape[stack_dims:])
+    slicings, errors = _site_slicings(wf, xf, cfg, last_layer)
+    d_in, d_out = int(wf.shape[1]), int(wf.shape[2])
+    sites = []
+    for k, idx in enumerate(np.ndindex(*lead) if stack_dims else [()]):
+        tag = ""
+        if stack_dims:
+            parts = [f"r{idx[0]}"] + [f"e{i}" for i in idx[1:]]
+            tag = "[" + ",".join(parts) + "]"
+        sites.append(SitePlan(
+            site=name + tag, d_in=d_in, d_out=d_out,
+            slicing=tuple(slicings[k]),
+            error=None if errors[k] is None else float(errors[k]),
+            search_adc_bits=cfg.pim_search_adc_bits, last_layer=last_layer))
+    if cfg.pim_mode in ("fast", "int8"):
+        leaf = jax.vmap(_fast_prepare_2d)(wf, xf)
+    else:
+        leaf = _exact_prepare_stacked(wf, xf, slicings)
+    leaf = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), leaf)
+    return leaf, sites
+
+
+# ------------------------------------------------------------------ compile
+def compile_pim_params(params: dict, cfg: ArchConfig,
+                       calib_tokens) -> CompiledPim | None:
+    """Compile ``params`` into per-site PIM plans for ``cfg.pim_mode``.
+
+    calib_tokens: (B, S) int32 token ids (or (B, S, D) embeds for
+    embedding-mode archs) used for activation-range calibration and the
+    adaptive-slicing search. Returns a :class:`CompiledPim`; mode 'off'
+    returns ``None`` — the float path needs no compile step.
+    """
+    if cfg.pim_mode == "off":
+        return None
+    if cfg.pim_mode not in ("fast", "exact", "int8"):
+        raise ValueError(f"unknown pim_mode {cfg.pim_mode!r}")
+    taps = _build_taps(cfg)
+    _capture(params, cfg, calib_tokens, taps)
+
+    sites: list[SitePlan] = []
+    blocks = []
+    for i in range(len(cfg.block_pattern)):
+        paths = _block_projections(cfg, i)
+        if paths is None:
+            blocks.append(None)
+            continue
+        bplan: dict = {}
+        for group, names in paths.items():
+            expert = group == "ffn" and cfg.moe_layer(i)
+            bplan[group] = {}
+            for name in names:
+                tap = taps["blocks"][i][group][name]
+                x_cal = np.stack(tap.x)  # (n_repeats, [E,] N, d_in)
+                leaf, leaf_sites = _compile_site(
+                    f"blocks[{i}].{group}.{name}",
+                    params["blocks"][i][group][name], x_cal, cfg,
+                    stack_dims=2 if expert else 1)
+                bplan[group][name] = leaf
+                sites.extend(leaf_sites)
+        blocks.append(bplan)
+    head, head_sites = _compile_site(
+        "embed.head", params["embed"]["head"], taps["embed"]["head"].x[0],
+        cfg, stack_dims=0, last_layer=True)
+    sites.extend(head_sites)
+    plans = {"embed": {"head": head}, "blocks": blocks}
+    return CompiledPim(cfg=cfg, plans=plans, specs=plan_specs(cfg),
+                       sites=tuple(sites))
+
+
+# ------------------------------------------------------------------ specs
+def _site_specs(ws: tuple, mode: str) -> dict:
+    """Plan-leaf logical axes derived from one weight's spec tuple.
+
+    ``ws`` ends with (in_axis, out_axis); leading entries are stack axes
+    (repeat ``None`` and/or ``experts``). The int8 offset planes keep the
+    float weight's layout; per-column terms keep the output axis; the
+    per-site slice tables (shifts/validity masks) are replicated along the
+    padded slice axis.
+    """
+    lead, out_ax = ws[:-2], ws[-1]
+    common = {"w_q": ws, "w_scale": lead + (out_ax,), "x_scale": lead}
+    if mode in ("fast", "int8"):
+        return dict(common, w_off=ws, centers=lead + (out_ax,),
+                    scale=lead + (out_ax,))
+    # exact: planes (n_slices, n_seg, rows_per_xbar, cols) per layer
+    return dict(common, planes=lead + (None, None, None, out_ax),
+                enc_centers=lead + (None, out_ax),
+                slice_shifts=lead + (None,),
+                slice_valid=lead + (None,))
+
+
+def plan_specs(cfg: ArchConfig) -> dict | None:
+    """Logical sharding axes mirroring ``compile_pim_params``'s plans."""
+    if cfg.pim_mode == "off":
+        return None
+    pspecs = T.param_specs(cfg)
+    blocks = []
+    for i in range(len(cfg.block_pattern)):
+        paths = _block_projections(cfg, i)
+        if paths is None:
+            blocks.append(None)
+            continue
+        blocks.append({
+            g: {n: _site_specs(tuple(pspecs["blocks"][i][g][n]),
+                               cfg.pim_mode)
+                for n in names}
+            for g, names in paths.items()})
+    head = _site_specs(tuple(pspecs["embed"]["head"]), cfg.pim_mode)
+    return {"embed": {"head": head}, "blocks": blocks}

@@ -18,13 +18,9 @@ Public surface:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.dist import shard

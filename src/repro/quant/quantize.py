@@ -14,9 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,14 +66,18 @@ def quantize_weights_centered(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray,
     return w_off, centers, scale.astype(jnp.float32)
 
 
-def quantize_inputs_unsigned(x: jnp.ndarray, x_max: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
+def quantize_inputs_unsigned(
+        x: jnp.ndarray,
+        x_max: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
     """ReLU-family activations: x in [0, x_max] -> uint8 [0, 255]."""
     scale = jnp.maximum(jnp.asarray(x_max, jnp.float32), 1e-12) / 255.0
     x_q = jnp.clip(jnp.round(x / scale), 0, 255).astype(jnp.int32)
     return x_q, scale
 
 
-def quantize_inputs_signed(x: jnp.ndarray, x_absmax: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
+def quantize_inputs_signed(
+        x: jnp.ndarray,
+        x_absmax: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Signed activations -> int8 [-127, 127] symmetric."""
     scale = jnp.maximum(jnp.asarray(x_absmax, jnp.float32), 1e-12) / 127.0
     x_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
@@ -92,7 +94,8 @@ def dequantize(y_int: jnp.ndarray, lq: LayerQuant,
     symmetric-input case (unused; here for API symmetry with PIM path).
     """
     del x_q_sum
-    corrected = y_int.astype(jnp.float32) - lq.x_zero_point.astype(jnp.float32) * w_col_sum.astype(jnp.float32)
+    corrected = y_int.astype(jnp.float32) \
+        - lq.x_zero_point.astype(jnp.float32) * w_col_sum.astype(jnp.float32)
     y = lq.w_scale[None, :] * lq.x_scale * corrected
     if lq.bias is not None:
         y = y + lq.bias[None, :]

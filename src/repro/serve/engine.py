@@ -3,11 +3,13 @@
 The engine owns jitted prefill/decode functions for one (arch, batch,
 max_len) bucket and exposes a request-batch API. RAELLA integration:
 with ``cfg.pim_mode != 'off'`` the engine requires the compiled plan
-pytree from ``repro.models.pim.prepare_pim_params`` and passes it to
+pytree from ``repro.models.pim.prepare_pim_params`` (the per-site
+architecture compiler, ``repro.models.pim_compile``) and passes it to
 every jitted prefill/decode call — 'fast' runs the weight-static
 projections on the centered int8 path (the paper's Eq. 1 on the MXU, see
 ``models.layers.pim_matmul``), 'exact' the bit-exact accelerator
-simulation (small models only), 'int8' the ideal 8b-quantized reference.
+simulation (small models only; each site runs its own compiled weight
+slicing), 'int8' the ideal 8b-quantized reference.
 """
 
 from __future__ import annotations

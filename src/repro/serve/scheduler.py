@@ -4,9 +4,11 @@ The lockstep ``ServeEngine`` pads every request in a batch to one prompt
 length and decodes until the *slowest* request finishes — a slot that
 retired early still burns a decode-step's FLOPs (and, under a non-'off'
 ``cfg.pim_mode``, PIM-path work: both engines thread the compiled plan
-pytree from ``repro.models.pim.prepare_pim_params`` through every jitted
-prefill/decode call, so the weight-static projections actually run the
-centered-int8 / exact-simulation path) on padding. RAELLA's economy is
+pytree from ``repro.models.pim.prepare_pim_params`` — the per-site
+architecture compiler, so each projection site runs its own compiled
+weight slicing — through every jitted prefill/decode call, so the
+weight-static projections actually run the centered-int8 /
+exact-simulation path) on padding. RAELLA's economy is
 converts per *useful* output, so the serving layer admits and retires
 requests independently instead:
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 

@@ -9,7 +9,7 @@ the 400B-class models train on a single 256-chip v5e pod (see DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

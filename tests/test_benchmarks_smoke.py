@@ -17,7 +17,8 @@ from benchmarks.run import REGISTRY  # noqa: E402
 
 
 def test_registry_covers_expected_entries():
-    for name in ("lm_on_pim", "serve_pim", "serve_continuous"):
+    for name in ("lm_on_pim", "serve_pim", "serve_continuous",
+                 "compile_report"):
         assert name in REGISTRY
 
 

@@ -3,10 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import adaptive as ad
-from repro.core import slicing as sl
 
 
 def _layer(rng, rows=512, cols=24, w_scale=0.04, skew=0.0):

@@ -4,7 +4,6 @@ import hypothesis
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import center_offset as co
 from repro.core import slicing as sl

@@ -1,0 +1,299 @@
+"""The per-site adaptive-slicing compiler (``repro.models.pim_compile``).
+
+Acceptance contract of the compiler refactor:
+
+- with ``pim_weight_slicing="adaptive"`` the compiler chooses *different*
+  slicings for different projection sites of a hybrid (attn + mamba +
+  MoE) arch, with the paper's conservative 1b-per-slice override for
+  ``lm_head``;
+- chosen slicings are ragged across the instances stacked into one
+  scan/vmap leaf, so planes are padded to the max slice count with
+  ``slice_valid`` masks and per-instance ``slice_shifts``;
+- ``plan_specs`` mirrors the new leaves and resolves under SERVE_RULES;
+- exact mode stays bit-exact vs the int8 ideal-quantized reference at a
+  wide ADC *under per-site slicings*, through greedy prefill + decode;
+- the hoisted stacked exact-prepare (one grouped Center+Offset encode,
+  one vmapped calibration trace) matches per-instance
+  ``pim_linear.prepare`` bit-for-bit;
+- ``measure_errors`` (single host sync per candidate group) matches
+  per-candidate ``measure_error``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import adaptive as ad
+from repro.core import pim_linear as pl
+from repro.core import slicing as sl
+from repro.models import pim
+from repro.models import pim_compile
+from repro.models import transformer as T
+
+CONSERVATIVE = (1,) * sl.WEIGHT_BITS
+
+
+def _hybrid_cfg(**over) -> ArchConfig:
+    """Attn + mamba + MoE toy arch with mixed projection row counts, so
+    Algorithm 1 lands on genuinely different slicings per site."""
+    base = dict(
+        name="hybrid-toy", family="hybrid", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=16, d_ff=144, vocab_size=64,
+        n_experts=2, experts_per_token=1, moe_every=2, capacity_factor=4.0,
+        block_pattern=("attn", "mamba"), mamba_d_state=8, remat=False,
+        pim_mode="exact", pim_weight_slicing="adaptive")
+    base.update(over)
+    return ArchConfig(**base)
+
+
+def _calib(cfg, b=2, s=8, seed=2):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (b, s), 0, cfg.vocab_size), np.int32)
+
+
+@pytest.fixture(scope="module")
+def adaptive_setup():
+    cfg = _hybrid_cfg()
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    # squash most rows of expert 0's down-projection: its column sums stay
+    # small, so Algorithm 1 picks fewer slices for it than for expert 1 —
+    # a *ragged* slicing within one vmapped expert leaf
+    w2 = params["blocks"][0]["ffn"]["w2"]
+    params["blocks"][0]["ffn"]["w2"] = w2.at[0, 0, 24:, :].set(0.0)
+    calib = _calib(cfg)
+    compiled = pim_compile.compile_pim_params(params, cfg, calib)
+    return cfg, params, calib, compiled
+
+
+class TestAdaptiveChoices:
+    def test_distinct_slicings_across_sites(self, adaptive_setup):
+        """Acceptance: at least two distinct slicings across projection
+        sites — and not merely via the lm_head override."""
+        _, _, _, compiled = adaptive_setup
+        non_head = {s.slicing for s in compiled.sites
+                    if s.site != "embed.head"}
+        assert len(non_head) >= 2, non_head
+        assert len(compiled.distinct_slicings()) >= 3
+
+    def test_lm_head_conservative(self, adaptive_setup):
+        _, _, _, compiled = adaptive_setup
+        head = compiled.site("embed.head")
+        assert head.slicing == CONSERVATIVE
+        assert head.last_layer
+
+    def test_site_table_is_complete(self, adaptive_setup):
+        """One SitePlan per projection instance: 4 attn + 3 mamba +
+        3 dense FFN + 3 MoE mats x 2 experts + head = 17."""
+        cfg, _, _, compiled = adaptive_setup
+        assert len(compiled.sites) == 17
+        assert all(s.error is not None for s in compiled.sites)
+        assert all(s.search_adc_bits == cfg.pim_search_adc_bits
+                   for s in compiled.sites)
+
+    def test_tuple_mode_pins_every_site(self):
+        """A tuple keeps today's fixed behavior: every site (incl. head)
+        gets the tuple, nothing is measured."""
+        cfg = _hybrid_cfg(n_experts=0, experts_per_token=0,
+                          pim_weight_slicing=(4, 2, 2), pim_mode="fast")
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        compiled = pim_compile.compile_pim_params(params, cfg, _calib(cfg))
+        assert compiled.distinct_slicings() == ((4, 2, 2),)
+        assert all(s.error is None for s in compiled.sites)
+
+
+class TestRaggedPlans:
+    def test_expert_leaf_is_ragged_with_valid_masks(self, adaptive_setup):
+        """The doctored expert 0 chose fewer slices than expert 1; the
+        shared leaf is padded to the max with the mask marking padding."""
+        _, _, _, compiled = adaptive_setup
+        s0 = compiled.site("blocks[0].ffn.w2[r0,e0]")
+        s1 = compiled.site("blocks[0].ffn.w2[r0,e1]")
+        assert s0.n_slices < s1.n_slices
+        leaf = compiled.plans["blocks"][0]["ffn"]["w2"]
+        valid = np.asarray(leaf["slice_valid"])[0]      # (E, n_max)
+        n_max = max(s0.n_slices, s1.n_slices)
+        assert valid.shape == (2, n_max)
+        np.testing.assert_array_equal(valid.sum(axis=1),
+                                      [s0.n_slices, s1.n_slices])
+        # padding planes are zeroed — a numerical no-op at the signed ADC
+        planes = np.asarray(leaf["planes"])[0]          # (E, n_max, ...)
+        assert not planes[0, s0.n_slices:].any()
+
+    def test_shifts_match_slice_bounds(self, adaptive_setup):
+        _, _, _, compiled = adaptive_setup
+        leaf = compiled.plans["blocks"][0]["ffn"]["w2"]
+        shifts = np.asarray(leaf["slice_shifts"])[0]    # (E, n_max)
+        for e in ("e0", "e1"):
+            sp = compiled.site(f"blocks[0].ffn.w2[r0,{e}]")
+            want = sl.slice_shifts(sp.slicing, sl.WEIGHT_BITS)
+            got = tuple(shifts[int(e[1])][:sp.n_slices])
+            assert got == want
+
+
+class TestSpecsMirror:
+    def test_plan_specs_mirror_plans_with_slice_leaves(self, adaptive_setup,
+                                                       abstract_mesh):
+        import jax.sharding as jsh
+
+        from repro.dist import sharding as dist_sharding
+        cfg, _, _, compiled = adaptive_setup
+        plans, specs = compiled.plans, compiled.specs
+        assert (jax.tree.structure(jax.tree.map(lambda _: 0, plans))
+                == jax.tree.structure(
+                    jax.tree.map(lambda _: 0, specs,
+                                 is_leaf=lambda x: isinstance(x, tuple))))
+        # slice tables keep the stack axes (repeat None, experts) and
+        # replicate the padded slice axis
+        leaf = specs["blocks"][0]["ffn"]["w2"]
+        assert leaf["slice_shifts"] == (None, "experts", None)
+        assert leaf["slice_valid"] == (None, "experts", None)
+        # every spec has one axis per array dim, incl. the new slice tables
+        for name, spec in leaf.items():
+            arr = plans["blocks"][0]["ffn"]["w2"][name]
+            assert len(spec) == arr.ndim, name
+        with dist_sharding.axis_rules(dist_sharding.SERVE_RULES):
+            resolved = jax.tree.map(
+                lambda s: dist_sharding.spec_for(s, abstract_mesh),
+                specs, is_leaf=lambda x: isinstance(x, tuple))
+        for p in jax.tree.leaves(
+                resolved, is_leaf=lambda x: isinstance(x, jsh.PartitionSpec)):
+            assert isinstance(p, jsh.PartitionSpec)
+
+    def test_prepare_pim_params_facade(self, adaptive_setup):
+        """The stable 2-tuple surface delegates to the compiler."""
+        cfg, params, calib, compiled = adaptive_setup
+        plans, specs = pim.prepare_pim_params(params, cfg, calib)
+        jax.tree.map(np.testing.assert_array_equal, plans, compiled.plans)
+        assert specs == compiled.specs
+
+
+class TestExactBitExact:
+    def test_exact_equals_int8_through_greedy_prefill_decode(
+            self, adaptive_setup):
+        """Acceptance: per-site (ragged) slicings keep the exact datapath
+        bit-exact vs the int8 reference at the wide (24b) ADC — any
+        slicing reconstructs the weights exactly when the ADC never
+        saturates, so heterogeneity must not change a single bit."""
+        cfg, params, calib, compiled = adaptive_setup
+        cfg_i8 = dataclasses.replace(cfg, pim_mode="int8")
+        plans = compiled.plans
+
+        lg_e = T.forward(params, cfg, jnp.asarray(calib), plans=plans)
+        lg_i = T.forward(params, cfg_i8, jnp.asarray(calib), plans=plans)
+        np.testing.assert_array_equal(np.asarray(lg_e), np.asarray(lg_i))
+
+        lg_e, st_e = T.prefill(params, cfg, jnp.asarray(calib),
+                               max_len=12, plans=plans)
+        lg_i, st_i = T.prefill(params, cfg_i8, jnp.asarray(calib),
+                               max_len=12, plans=plans)
+        np.testing.assert_array_equal(np.asarray(lg_e), np.asarray(lg_i))
+        for _ in range(3):
+            tok = jnp.argmax(lg_e[:, -1:], -1)
+            lg_e, st_e = T.decode_step(params, cfg, st_e, tok, plans=plans)
+            lg_i, st_i = T.decode_step(params, cfg_i8, st_i, tok,
+                                       plans=plans)
+            np.testing.assert_array_equal(np.asarray(lg_e),
+                                          np.asarray(lg_i))
+
+
+class TestStackedPrepare:
+    def test_matches_per_instance_prepare(self):
+        """The hoisted group-encode (instances folded into the column
+        axis) reproduces per-instance ``pim_linear.prepare`` bit-for-bit,
+        ragged slicings included."""
+        rng = np.random.default_rng(0)
+        K, R, C = 3, 70, 12
+        wf = jnp.asarray(rng.normal(0, 0.05, (K, R, C)), jnp.float32)
+        xf = jnp.asarray(rng.normal(0, 0.5, (K, 6, R)), jnp.float32)
+        slicings = [(4, 4), (4, 2, 2), CONSERVATIVE]
+        leaf = pim_compile._exact_prepare_stacked(wf, xf, slicings)
+        n_max = max(len(s) for s in slicings)
+        assert leaf["planes"].shape[:2] == (K, n_max)
+        for k, s in enumerate(slicings):
+            ref = pl.prepare(wf[k], xf[k], weight_slicing=s,
+                             signed_inputs=True)
+            np.testing.assert_array_equal(
+                np.asarray(leaf["w_q"][k]), np.asarray(ref.w_q))
+            np.testing.assert_array_equal(
+                np.asarray(leaf["planes"][k][:len(s)]),
+                np.asarray(ref.enc.planes))
+            assert not np.asarray(leaf["planes"][k][len(s):]).any()
+            np.testing.assert_array_equal(
+                np.asarray(leaf["enc_centers"][k]),
+                np.asarray(ref.enc.centers))
+            assert tuple(np.asarray(leaf["slice_shifts"][k])[:len(s)]) \
+                == ref.enc.shifts
+            np.testing.assert_array_equal(
+                np.asarray(leaf["slice_valid"][k]),
+                [True] * len(s) + [False] * (n_max - len(s)))
+
+
+class TestBatchedMeasure:
+    def test_measure_errors_matches_singles(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(0, 0.05, (96, 10)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 0.4, (8, 96)), jnp.float32)
+        cands = [(4, 4), (4, 2, 2), (2, 2, 2, 2)]
+        batch = ad.measure_errors(w, x, cands)
+        singles = [ad.measure_error(w, x, s) for s in cands]
+        np.testing.assert_allclose(batch, np.asarray(singles, np.float32),
+                                   rtol=0, atol=0)
+
+    def test_find_best_slicing_all_errors_are_floats(self):
+        """The batched group evaluation still reports every tried
+        candidate (host-side floats, one sync per group)."""
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.normal(0, 0.04, (128, 12)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 0.4, (8, 128)), jnp.float32)
+        choice = ad.find_best_slicing(w, x)
+        assert choice.slicing in choice.all_errors
+        assert all(isinstance(e, float)
+                   for e in choice.all_errors.values())
+        for s, e in choice.all_errors.items():
+            if len(s) < choice.n_slices:
+                assert e >= ad.ERROR_BUDGET
+
+
+class TestAdaptiveFastMode:
+    def test_fast_adaptive_serves(self):
+        """'adaptive' composes with the fast path: the search drives the
+        architecture table (and energy report); the Eq. 1 int8 numerics
+        are slicing-independent, so fast output matches a pinned-slicing
+        fast compile exactly."""
+        cfg = _hybrid_cfg(n_layers=2, d_model=32, d_ff=48, head_dim=16,
+                          pim_mode="fast")
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        calib = _calib(cfg)
+        compiled = pim_compile.compile_pim_params(params, cfg, calib)
+        assert compiled.site("embed.head").slicing == CONSERVATIVE
+        cfg_pin = dataclasses.replace(cfg, pim_weight_slicing=(4, 2, 2))
+        plans_pin, _ = pim.prepare_pim_params(params, cfg_pin, calib)
+        lg_a = T.forward(params, cfg, jnp.asarray(calib),
+                         plans=compiled.plans)
+        lg_p = T.forward(params, cfg_pin, jnp.asarray(calib),
+                         plans=plans_pin)
+        np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_p))
+
+
+class TestReport:
+    def test_report_prices_every_site(self, adaptive_setup):
+        """Energy report: per-site converts/MAC + energy, slice histogram,
+        whole-model aggregates — all JSON-serializable."""
+        import json
+        _, _, _, compiled = adaptive_setup
+        rep = compiled.report(tokens=64)
+        json.dumps(rep)
+        assert rep["n_sites"] == len(compiled.sites) == len(rep["sites"])
+        assert sum(compiled.slice_histogram().values()) == rep["n_sites"]
+        for row in rep["sites"]:
+            assert row["converts_per_mac"] > 0
+            assert 0 < row["adc_share"] < 1
+        # the conservative head needs more converts/MAC than a 2-slice site
+        by_site = {r["site"]: r for r in rep["sites"]}
+        head = by_site["embed.head"]
+        two_slice = next(r for r in rep["sites"] if r["n_slices"] == 2)
+        assert head["converts_per_mac"] > two_slice["converts_per_mac"]
