@@ -79,8 +79,17 @@ REGISTRY: dict[str, Entry] = {
         smoke_kwargs=dict(tokens=128)),
     "roofline": Entry(
         "roofline",
-        lambda o: f"{o.get('cells', 0)} cells, "
-                  f"bottlenecks {o.get('bottleneck_histogram')}"),
+        lambda o: f"fused {o['fused_kernel']['best_backend']} "
+                  f"achieved-vs-ideal "
+                  f"{o['fused_kernel']['best_achieved_vs_ideal']} "
+                  f"(bit_exact="
+                  + str(all(b["bit_exact"]
+                            for b in o["fused_kernel"]["backends"].values()))
+                  + f"); {o.get('cells', 0)} dry-run cells, "
+                  f"bottlenecks {o.get('bottleneck_histogram')}",
+        smoke_kwargs=dict(fused_batch=2, fused_rows=96, fused_cols=8,
+                          fused_reps=1,
+                          fused_backends=("xla", "interpret"))),
     "serve_continuous": Entry(
         "serve_continuous",
         lambda o: f"decode util {o['lockstep_util']:.2f} -> "

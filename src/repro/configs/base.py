@@ -52,6 +52,13 @@ class ArchConfig:
     # come from repro.models.pim.prepare_pim_params.
     pim_mode: str = "off"
     pim_use_pallas: bool = False       # fast path: Pallas kernel vs XLA ref
+    # Kernel backend for the repro.kernels.ops registry (fused exact
+    # datapath + fast-path matmul): "auto" picks pallas-tpu on TPU and
+    # the XLA reference elsewhere; "interpret" forces the Pallas
+    # interpreter (bit-identical, slow — CI's kernel leg); "python"
+    # forces the crossbar reference loop (exact mode only). The
+    # REPRO_KERNEL_BACKEND env var overrides this at dispatch time.
+    pim_kernel_backend: str = "auto"
     # Weight slicing fed to the compile step (repro.models.pim_compile):
     # a tuple pins every projection site to that slicing; "adaptive" runs
     # the paper's Algorithm 1 per site (per repeat-layer, per MoE expert,
@@ -80,6 +87,12 @@ class ArchConfig:
             raise ValueError(
                 f"{self.name}: pim_weight_slicing {ws!r} must cover 8 weight "
                 "bits with 1..4b slices (paper: <=4b ReRAM devices)")
+        allowed = ("auto", "xla", "interpret", "pallas", "pallas-tpu",
+                   "pallas-gpu", "python")
+        if self.pim_kernel_backend not in allowed:
+            raise ValueError(
+                f"{self.name}: pim_kernel_backend "
+                f"{self.pim_kernel_backend!r} not in {allowed}")
 
     @property
     def resolved_head_dim(self) -> int:

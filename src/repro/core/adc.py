@@ -23,22 +23,55 @@ import jax.numpy as jnp
 class ADCConfig:
     bits: int = 7
     signed: bool = True
+    # Offset of the conversion window (a miscalibrated converter whose
+    # code 0 does not sit at analog 0). The crossbar padding contract —
+    # zero-padded rows / slice planes are numerically inert — requires a
+    # window containing 0 (``check_zero_preserving``); the datapath
+    # refuses to run otherwise.
+    zero_point: int = 0
 
     @property
     def lo(self) -> int:
-        return -(1 << (self.bits - 1)) if self.signed else 0
+        base = -(1 << (self.bits - 1)) if self.signed else 0
+        return base + self.zero_point
 
     @property
     def hi(self) -> int:
-        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+        base = (1 << (self.bits - 1)) - 1 if self.signed \
+            else (1 << self.bits) - 1
+        return base + self.zero_point
 
     @property
     def levels(self) -> int:
         return 1 << self.bits
 
+    @property
+    def zero_preserving(self) -> bool:
+        """Does this ADC map an analog 0 to digital 0 (clip is identity
+        at 0)? Padding planes and zero-padded rows rely on this."""
+        return self.lo <= 0 <= self.hi
+
 
 RAELLA_ADC = ADCConfig(bits=7, signed=True)      # [-64, 63]
 ISAAC_ADC = ADCConfig(bits=8, signed=False)      # ISAAC: unsigned arithmetic
+
+
+def check_zero_preserving(cfg: ADCConfig) -> None:
+    """Assert the padding invariant: the ADC window must contain 0.
+
+    ``EncodedWeights`` zero-pads segment rows and (for ragged per-site
+    plans) whole slice planes; correctness of both the Python datapath
+    and the fused kernel requires a zero column sum to convert to 0. An
+    ADC whose window excludes 0 (e.g. a non-zero ``zero_point`` pushing
+    ``lo`` above 0) silently biases every padded conversion, so refuse
+    loudly instead.
+    """
+    if not cfg.zero_preserving:
+        raise ValueError(
+            f"ADC window [{cfg.lo}, {cfg.hi}] (bits={cfg.bits}, "
+            f"signed={cfg.signed}, zero_point={cfg.zero_point}) does not "
+            "contain 0: zero-padded crossbar rows/planes would convert to "
+            f"{min(max(0, cfg.lo), cfg.hi)}, breaking the padding contract")
 
 
 def convert(col_sum: jnp.ndarray,
@@ -54,6 +87,7 @@ def convert(col_sum: jnp.ndarray,
     either bound (the paper's detection rule; exact-at-bound values flag as
     failures too, which is faithful).
     """
+    check_zero_preserving(cfg)
     x = col_sum.astype(jnp.float32)
     if noise_level and key is not None:
         if pos_sum is None or neg_sum is None:

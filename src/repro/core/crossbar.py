@@ -70,15 +70,27 @@ def forward(x_u8: jnp.ndarray,
             *,
             noise_level: float = 0.0,
             key: jax.Array | None = None,
-            ideal: bool = False) -> tuple[jnp.ndarray, CrossbarStats]:
+            ideal: bool = False,
+            backend: str | None = None) -> tuple[jnp.ndarray, CrossbarStats]:
     """Full-fidelity-path crossbar forward (static input slicing, no speculation).
 
     x_u8: (B, rows) unsigned 8b inputs. Returns (psum int32 (B, cols), stats).
     ``ideal=True`` skips the ADC entirely (infinite-resolution reference).
 
+    At noise 0 the whole datapath runs as ONE fused kernel op
+    (``repro.kernels.ops.fused_crossbar_forward``: in-kernel input
+    slicing, per-segment ADC clamp, shift+add, center term, saturation
+    count) — bit-exact vs the loop below, since in-range column sums are
+    far below 2^24 so ``adc.convert``'s float32 round is the identity on
+    them. ``backend`` picks the kernel backend per the registry rules
+    ('xla' / 'interpret' / 'pallas-tpu' / 'auto', env-overridable);
+    ``backend='python'`` forces the reference loop (the oracle the
+    differential tests compare against). Noisy or ideal runs always use
+    the loop.
+
     ``enc`` may carry *padded* slice planes (per-site compiled plans pad the
     slice axis to a common max): all-zero padding planes convert to 0 at the
-    signed ADC and contribute nothing, so the loop below is correct without
+    signed ADC and contribute nothing, so both paths are correct without
     a mask; ``enc.shifts`` may then be a traced int32 array rather than a
     static tuple (the shift applied to a zero value is irrelevant). The
     work *stats*, however, count every plane — convert counts are only
@@ -88,9 +100,27 @@ def forward(x_u8: jnp.ndarray,
     """
     B = x_u8.shape[0]
     n_seg, R = enc.n_segments, enc.rows_per_xbar
-    xs = _segment_inputs(x_u8, n_seg, R)  # (B, n_seg, R)
     in_bounds = sl.slice_bounds(input_slicing, sl.INPUT_BITS)
     planes = jnp.asarray(enc.planes)  # (n_w, n_seg, R, C)
+
+    if not ideal:
+        adc_lib.check_zero_preserving(adc)  # the padding contract
+    noiseless = noise_level == 0.0 or key is None
+    if not ideal and noiseless and backend != "python":
+        from repro.kernels import ops as kops
+        psum, sats = kops.fused_crossbar_forward(
+            x_u8, planes, enc.shifts, jnp.asarray(enc.centers),
+            input_slicing=tuple(int(b) for b in input_slicing),
+            adc_lo=adc.lo, adc_hi=adc.hi, rows_per_xbar=R, backend=backend)
+        total = B * n_seg * enc.cols * len(in_bounds) * enc.n_slices
+        stats = CrossbarStats(
+            adc_converts=jnp.asarray(total, jnp.int32),
+            saturations=sats.astype(jnp.int32),
+            conversions_possible=jnp.asarray(total, jnp.int32),
+            macs=B * enc.rows * enc.cols)
+        return psum, stats
+
+    xs = _segment_inputs(x_u8, n_seg, R)  # (B, n_seg, R)
 
     psum = co.center_term(x_u8, enc)  # (B, C) int32 — digital center term
     total_converts = 0

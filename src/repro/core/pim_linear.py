@@ -48,6 +48,11 @@ class PimPlan:
     speculation: bool
     spec_slicing: tuple[int, ...] = spec.SPEC_SLICING
     encode_mode: str = "center"     # "center" | "zero" (differential baseline)
+    # kernel backend for the static-slicing exact path and the fast path
+    # (repro.kernels.ops registry: 'auto' | 'xla' | 'interpret' |
+    # 'pallas-tpu' | ...; 'python' forces the crossbar reference loop).
+    # None defers to the call site / 'auto'.
+    kernel_backend: str | None = None
     # fast (TPU-native) path: asymmetric centered quantization, Eq. 1 in float
     fast_w_off: np.ndarray | None = None    # int8 offsets (rows, cols)
     fast_centers: np.ndarray | None = None  # int32 per-column centers
@@ -103,14 +108,17 @@ def _accumulate_int(x_q: jnp.ndarray, plan: PimPlan, *,
     for i, (sign, xp) in enumerate(passes):
         k = None if key is None else jax.random.fold_in(key, i)
         if plan.speculation:
+            # data-dependent recovery: stays on the Python datapath
             psum, st = spec.forward(xp, plan.enc, plan.spec_slicing, plan.adc,
                                     noise_level=noise_level, key=k)
         elif input_slicing is None:
             psum, st = xbar.forward(xp, plan.enc, (1,) * sl.INPUT_BITS, plan.adc,
-                                    noise_level=noise_level, key=k)
+                                    noise_level=noise_level, key=k,
+                                    backend=plan.kernel_backend)
         else:
             psum, st = xbar.forward(xp, plan.enc, input_slicing, plan.adc,
-                                    noise_level=noise_level, key=k)
+                                    noise_level=noise_level, key=k,
+                                    backend=plan.kernel_backend)
         acc = acc + sign * psum
         stats.append(st)
     # unsigned-weight-domain -> signed int8 weight domain: w_q = w_u - 128
@@ -150,13 +158,17 @@ def forward_int_reference(x: jnp.ndarray, plan: PimPlan) -> jnp.ndarray:
     return q.dequantize(y_int, plan.lq, x_q.sum(-1), w_col_sum)
 
 
-def forward_fast(x: jnp.ndarray, plan: PimPlan, *, use_pallas: bool = False) -> jnp.ndarray:
+def forward_fast(x: jnp.ndarray, plan: PimPlan, *, use_pallas: bool = False,
+                 backend: str | None = None) -> jnp.ndarray:
     """TPU-native centered-int8 path (no ADC model — deployment arithmetic).
 
     Implements Eq. 1 in the quantized-float domain:
         y = s_x * s_w ⊙ ( x_q @ W_off  +  sum(x_q) ⊗ phi )
     where (W_off, phi, s_w) come from asymmetric per-channel centered
     quantization — offsets guaranteed int8, centers digital.
+
+    ``backend`` (or ``plan.kernel_backend``) selects a registry backend
+    by name; otherwise the legacy ``use_pallas`` flag applies.
     """
     from repro.kernels import ops as kops
     if plan.lq.x_signed:
@@ -166,9 +178,15 @@ def forward_fast(x: jnp.ndarray, plan: PimPlan, *, use_pallas: bool = False) -> 
         # shift unsigned codes to the signed domain: u - 128 in [-128, 127]
         x_q = (jnp.clip(jnp.round(x / plan.lq.x_scale), 0, 255) - 128).astype(jnp.int8)
         shift = 128
-    y_int = kops.centered_int8_matmul(
-        x_q, jnp.asarray(plan.fast_w_off), jnp.asarray(plan.fast_centers),
-        use_pallas=use_pallas)
+    be = backend or plan.kernel_backend
+    if be is not None and be not in ("auto", "python"):
+        y_int = kops.centered_int8_matmul(
+            x_q, jnp.asarray(plan.fast_w_off), jnp.asarray(plan.fast_centers),
+            backend=be)
+    else:
+        y_int = kops.centered_int8_matmul(
+            x_q, jnp.asarray(plan.fast_w_off), jnp.asarray(plan.fast_centers),
+            use_pallas=use_pallas)
     if shift:
         # undo the input shift: u @ W = (u-128) @ W + 128 * colsum(W_off + phi)
         w_col = (plan.fast_w_off.astype(np.int64).sum(axis=0)

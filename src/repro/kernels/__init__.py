@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernels here: int8_matmul (Eq. 1 fast path), sliced_crossbar
+# (slice-pair contraction), fused_crossbar (the whole exact datapath:
+# in-kernel input slicing + per-segment ADC + shift-and-accumulate +
+# center term + saturation counting). ``ops`` fronts them with the
+# kernel-backend registry (xla / interpret / pallas-tpu, env override
+# REPRO_KERNEL_BACKEND); ``ref`` holds the pure-jnp oracles.

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -51,3 +52,39 @@ def sliced_crossbar_matmul(x_slices: jnp.ndarray, w_planes: jnp.ndarray,
             cs = jnp.clip(cs, adc_lo, adc_hi)  # per-segment ADC
             out = out + cs.sum(axis=1) * mults[i, j]
     return out
+
+
+def fused_crossbar(x_u8: jnp.ndarray, w_planes: jnp.ndarray,
+                   in_li: jnp.ndarray, in_mask: jnp.ndarray,
+                   mults: jnp.ndarray, centers: jnp.ndarray, *,
+                   rows_per_xbar: int = 512,
+                   adc_lo: int = -64,
+                   adc_hi: int = 63) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-XLA reference for ``fused_crossbar.fused_crossbar``.
+
+    Same contract as the Pallas kernel: x_u8 (B, R) int32 unsigned 8b
+    codes, w_planes (n_j, Rp, C) int8 with Rp a rows_per_xbar multiple,
+    in_li / in_mask (n_i,) int32 input-slice crop tables, mults
+    (n_i, n_j) int32 recombination multipliers (0 = padded slice),
+    centers (n_seg, C) int32. Returns (psum (B, C) int32 including the
+    digital center term, saturation count () int32).
+    """
+    B, R = x_u8.shape
+    n_j, Rp, C = w_planes.shape
+    n_seg = Rp // rows_per_xbar
+    n_i = in_li.shape[0]
+    xs = jnp.pad(x_u8.astype(jnp.int32), ((0, 0), (0, Rp - R)))
+    xs = xs.reshape(B, n_seg, rows_per_xbar)
+    ws = w_planes.reshape(n_j, n_seg, rows_per_xbar, C).astype(jnp.int32)
+    out = jnp.einsum("bsr,sc->bc", xs, centers.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)  # center term
+    sats = jnp.zeros((), jnp.int32)
+    for i in range(n_i):
+        x_i = jax.lax.shift_right_logical(xs, in_li[i]) & in_mask[i]
+        for j in range(n_j):
+            cs = jnp.einsum("bsr,src->bsc", x_i, ws[j],
+                            preferred_element_type=jnp.int32)
+            cs = jnp.clip(cs, adc_lo, adc_hi)  # per-segment ADC
+            sats = sats + ((cs == adc_lo) | (cs == adc_hi)).sum()
+            out = out + cs.sum(axis=1) * mults[i, j]
+    return out, sats

@@ -68,6 +68,13 @@ def main() -> None:
     ap.add_argument("--pim-slicing", default=None,
                     help="'adaptive' (Algorithm 1 per projection site) or "
                          "a comma tuple like '4,2,2' pinning every site")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("auto", "xla", "interpret", "pallas",
+                             "pallas-tpu", "pallas-gpu", "python"),
+                    help="repro.kernels.ops registry backend for the PIM "
+                         "kernels (fused exact datapath / fast matmul); "
+                         "'auto' = pallas-tpu on TPU, XLA ref elsewhere. "
+                         "REPRO_KERNEL_BACKEND overrides at dispatch time")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -75,6 +82,10 @@ def main() -> None:
         cfg = cfg.reduced()
     if args.pim != cfg.pim_mode:
         cfg = dataclasses.replace(cfg, pim_mode=args.pim)
+    if args.kernel_backend is not None:
+        if cfg.pim_mode == "off":
+            ap.error("--kernel-backend requires --pim fast|exact|int8")
+        cfg = dataclasses.replace(cfg, pim_kernel_backend=args.kernel_backend)
     if args.pim_slicing is not None:
         if cfg.pim_mode == "off":
             ap.error("--pim-slicing requires --pim fast|exact|int8 "

@@ -77,6 +77,7 @@ def _plan_to_pim_plan(plan: dict, cfg: ArchConfig, rows: int) -> pim_linear.PimP
         enc=enc, lq=lq, w_q=plan["w_q"], weight_slicing=None,
         adc=adc_lib.ADCConfig(bits=cfg.pim_adc_bits, signed=True),
         speculation=cfg.pim_speculation,
+        kernel_backend=cfg.pim_kernel_backend,
         fast_w_off=plan.get("w_off"), fast_centers=plan.get("centers"),
         fast_scale=plan.get("scale"))
 
