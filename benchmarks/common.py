@@ -101,17 +101,19 @@ def mlp_accuracy(mlp: MLP, ds, n: int = 2048, layer_fn=None) -> float:
     return float((pred == y).mean())
 
 
-def pim_layer_fn(mlp: MLP, ds, *, encode_mode="center",
-                 weight_slicing=(4, 2, 2), adc=adc_lib.RAELLA_ADC,
-                 speculation=True, noise_level=0.0, seed=0,
-                 rows_per_xbar=512):
-    """Build a layer function running both MLP matmuls through the exact
-    accelerator simulation (plans prepared once, reused per call)."""
+def build_pim_plans(mlp: MLP, ds, *, encode_mode="center",
+                    weight_slicing=(4, 2, 2), adc=adc_lib.RAELLA_ADC,
+                    speculation=True, rows_per_xbar=512) -> dict:
+    """Compile both MLP matmuls into PimPlans — the write-once step.
+
+    Returned plans are device-agnostic; hand them to ``plans_layer_fn``
+    (any number of times, with different analog array models) to score
+    them without re-encoding, mirroring ReRAM's write-once/read-many
+    amortization."""
     x_cal, _ = ds.batch(77, 10)  # paper: ten calibration inputs
     h_cal = jnp.maximum(x_cal @ mlp.w1, 0.0)
-    plans = {}
 
-    def build(idx, w, cal):
+    def build(w, cal):
         plan = plin.prepare(
             w, cal, weight_slicing=weight_slicing, adc=adc,
             speculation=speculation, encode_mode=encode_mode)
@@ -122,11 +124,36 @@ def pim_layer_fn(mlp: MLP, ds, *, encode_mode="center",
             plan = dataclasses.replace(plan, enc=enc)
         return plan
 
-    plans[0] = build(0, mlp.w1, x_cal)
-    plans[1] = build(1, mlp.w2, h_cal)
+    return {0: build(mlp.w1, x_cal), 1: build(mlp.w2, h_cal)}
+
+
+def plans_layer_fn(plans: dict, *, noise_level=0.0, seed=0, device=None):
+    """Layer function reading through already-compiled plans.
+
+    ``device`` (a ``repro.core.backends.CrossbarBackend``) swaps the
+    analog array model — e.g. a ``NonidealSim`` die corner — without
+    touching the compiled encode, so corner sweeps answer "does this
+    exact programmed image survive a 3-sigma die?"."""
+    if device is not None:
+        plans = {i: dataclasses.replace(p, device=device)
+                 for i, p in plans.items()}
     key = jax.random.key(seed)
 
     def layer(x, w, idx):
         return plin.forward_exact(x, plans[idx], noise_level=noise_level,
                                   key=jax.random.fold_in(key, idx))
     return layer
+
+
+def pim_layer_fn(mlp: MLP, ds, *, encode_mode="center",
+                 weight_slicing=(4, 2, 2), adc=adc_lib.RAELLA_ADC,
+                 speculation=True, noise_level=0.0, seed=0,
+                 rows_per_xbar=512, device=None):
+    """Build a layer function running both MLP matmuls through the exact
+    accelerator simulation (plans prepared once, reused per call)."""
+    plans = build_pim_plans(mlp, ds, encode_mode=encode_mode,
+                            weight_slicing=weight_slicing, adc=adc,
+                            speculation=speculation,
+                            rows_per_xbar=rows_per_xbar)
+    return plans_layer_fn(plans, noise_level=noise_level, seed=seed,
+                          device=device)

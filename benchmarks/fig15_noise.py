@@ -8,10 +8,13 @@ RAELLA's strategies hold accuracy to much higher noise."""
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 
-from benchmarks.common import mlp_accuracy, pim_layer_fn, trained_mlp
-from repro.core import adaptive
+from benchmarks.common import (build_pim_plans, mlp_accuracy, pim_layer_fn,
+                               plans_layer_fn, trained_mlp)
+from repro.core import adaptive, backends
 from repro.core import adc as adc_lib
 
 NOISE_LEVELS = (0.0, 0.04, 0.08, 0.12)
@@ -55,6 +58,59 @@ def run(noise_levels: tuple = NOISE_LEVELS, eval_n: int = 2048,
     return out
 
 
+def run_device_corners(corners: tuple = ("nominal", "1sigma", "3sigma"),
+                       eval_n: int = 2048, train_steps: int = 1500,
+                       die_seeds: tuple = (0,)) -> dict:
+    """Accuracy vs ReRAM device corner on ONE compiled plan.
+
+    The plan — Algorithm-1 slicing choice + Center+Offset encode — is
+    compiled once at nominal; each corner then only swaps the analog
+    array model (``repro.core.backends.NonidealSim``: conductance program
+    noise, retention drift, stuck-at fault maps, IR drop). That is the
+    write-once/read-many question a fab cares about: does the *unmodified*
+    programmed die image survive a 1-sigma / 3-sigma die? The ``nominal``
+    corner is the all-zero magnitudes die, bit-exact with the ideal sim
+    (the zero-corner contract), so its row doubles as the reference."""
+    mlp, ds = trained_mlp(steps=train_steps)
+    acc_f = mlp_accuracy(mlp, ds, n=eval_n)
+    x_cal, _ = ds.batch(77, 10)
+    choice = adaptive.find_best_slicing(mlp.w1, x_cal,
+                                        key=jax.random.key(1))
+    plans = build_pim_plans(mlp, ds, encode_mode="center",
+                            weight_slicing=choice.slicing,
+                            speculation=False)
+    out = {"float_reference": acc_f,
+           "slicing": list(choice.slicing)}
+    for name in corners:
+        accs = []
+        for seed in die_seeds:
+            dev = backends.make("nonideal", name, seed=seed)
+            layer = plans_layer_fn(plans, device=dev)
+            accs.append(mlp_accuracy(mlp, ds, n=eval_n, layer_fn=layer))
+        acc = sum(accs) / len(accs)
+        out[f"corner_{name}"] = {
+            "accuracy": acc,
+            "drop_pts": round(100 * (acc_f - acc), 2),
+            "dies": len(accs),
+        }
+    return out
+
+
 if __name__ == "__main__":
-    for k, v in run().items():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device-corner", default=None,
+                    choices=tuple(backends.CORNERS),
+                    help="sweep device corners (nominal..the named corner) "
+                         "on one compiled plan instead of the noise figure")
+    ap.add_argument("--eval-n", type=int, default=2048)
+    ap.add_argument("--train-steps", type=int, default=1500)
+    args = ap.parse_args()
+    if args.device_corner is not None:
+        names = tuple(backends.CORNERS)
+        sweep = names[:names.index(args.device_corner) + 1]
+        res = run_device_corners(corners=sweep, eval_n=args.eval_n,
+                                 train_steps=args.train_steps)
+    else:
+        res = run(eval_n=args.eval_n, train_steps=args.train_steps)
+    for k, v in res.items():
         print(k, v)

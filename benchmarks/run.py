@@ -17,15 +17,17 @@ from typing import Callable
 
 @dataclasses.dataclass(frozen=True)
 class Entry:
-    """One benchmark: a ``benchmarks.<module>.run`` plus its headline
+    """One benchmark: a ``benchmarks.<module>.<attr>`` plus its headline
     formatter and the kwargs that shrink it to smoke-test size."""
     module: str
     derive: Callable[[object], str]
     smoke_kwargs: dict = dataclasses.field(default_factory=dict)
+    attr: str = "run"   # entry point inside the module (e.g. the
+                        # device-corner sweeps' run_device_corners)
 
     def run(self, **kwargs):
-        return importlib.import_module(f"benchmarks.{self.module}").run(
-            **kwargs)
+        return getattr(importlib.import_module(f"benchmarks.{self.module}"),
+                       self.attr)(**kwargs)
 
 
 REGISTRY: dict[str, Entry] = {
@@ -72,6 +74,22 @@ REGISTRY: dict[str, Entry] = {
             if isinstance(v, float)),
         smoke_kwargs=dict(noise_levels=(0.12,), eval_n=512,
                           train_steps=300)),
+    "fig15_corners": Entry(
+        "fig15_noise",
+        lambda o: "acc by die corner (one compiled plan): " + " ".join(
+            f"{k[len('corner_'):]}={v['accuracy']:.2f}"
+            for k, v in o.items() if k.startswith("corner_")),
+        smoke_kwargs=dict(corners=("nominal", "3sigma"), eval_n=256,
+                          train_steps=300),
+        attr="run_device_corners"),
+    "table4_corners": Entry(
+        "table4_accuracy",
+        lambda o: f"3sigma die drop C+O "
+                  f"{o['center']['3sigma']['drop_pts']} vs Z+O "
+                  f"{o['zero']['3sigma']['drop_pts']} pts (no retraining)",
+        smoke_kwargs=dict(corners=("nominal", "3sigma"), eval_n=256,
+                          train_steps=300),
+        attr="run_device_corners"),
     "lm_on_pim": Entry(
         "lm_on_pim",
         lambda o: f"assigned-LM zoo on RAELLA silicon: "

@@ -71,6 +71,16 @@ class ArchConfig:
     pim_search_adc_bits: int = 7       # ADC assumed by the Algorithm-1
                                        # search (paper: the real 7b ADC,
                                        # independent of pim_adc_bits)
+    # Analog array model for the exact path (repro.core.backends):
+    # "ideal" is the exact integer 2T2R read (fused-kernel eligible);
+    # "nonideal" programs every crossbar with the ReRAM nonidealities of
+    # the named pim_device_corner (conductance program noise, retention
+    # drift, stuck-at fault maps, IR drop), deterministic in
+    # pim_device_seed — the "does this plan survive a 3-sigma die?"
+    # sweep axis. serve.py exposes it as --device-corner.
+    pim_crossbar_backend: str = "ideal"
+    pim_device_corner: str = "nominal"  # nominal | 1sigma | 3sigma
+    pim_device_seed: int = 0            # die seed (fault maps, write noise)
 
     def __post_init__(self):
         if self.n_layers % len(self.block_pattern) != 0:
@@ -93,6 +103,15 @@ class ArchConfig:
             raise ValueError(
                 f"{self.name}: pim_kernel_backend "
                 f"{self.pim_kernel_backend!r} not in {allowed}")
+        if self.pim_crossbar_backend not in ("ideal", "nonideal"):
+            raise ValueError(
+                f"{self.name}: pim_crossbar_backend "
+                f"{self.pim_crossbar_backend!r} not in ('ideal', 'nonideal')")
+        corners = ("nominal", "1sigma", "3sigma")  # repro.core.backends.CORNERS
+        if self.pim_device_corner not in corners:
+            raise ValueError(
+                f"{self.name}: pim_device_corner "
+                f"{self.pim_device_corner!r} not in {corners}")
 
     @property
     def resolved_head_dim(self) -> int:

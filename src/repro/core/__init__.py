@@ -2,6 +2,7 @@
 
 Submodules:
   slicing        bit-slice arithmetic (D(h,l,x), 108 slicings)
+  backends       CrossbarBackend ABC: IdealSim / NonidealSim device models
   center_offset  Eq. 2 center solve + 2T2R offset encoding
   adc            7b saturating ADC + analog noise model
   crossbar       bit-exact 512-row crossbar forward
@@ -16,6 +17,7 @@ Submodules:
 from repro.core import (  # noqa: F401
     adaptive,
     adc,
+    backends,
     center_offset,
     crossbar,
     energy,

@@ -1,0 +1,254 @@
+"""Device-realism crossbar backends: an abstract analog-array model.
+
+RAELLA's accuracy claim — low-resolution PIM *without retraining* — is
+only credible if the simulated array behaves like ReRAM silicon, not
+like an exact integer matmul. This module splits the analog read out of
+``core.crossbar.forward`` behind a pure-abstract ``CrossbarBackend``
+(mirroring daffodil-lib's ``Daffodil_Base`` / ``Daffodil_Sim`` split:
+program once, read many):
+
+  ``IdealSim``     the exact integer 2T2R model the repo always had —
+                   signed slice planes as (G+, G-) integer conductances,
+                   int32 column sums. ``crossbar.forward`` keeps routing
+                   its noiseless runs through the fused Pallas kernel.
+
+  ``NonidealSim``  a ReRAM die. ``program`` perturbs the conductances
+                   with the four dominant eNVM nonidealities, composed
+                   in physical order:
+
+                     1. conductance program error — per-device
+                        multiplicative lognormal, ``G * exp(sigma * n)``
+                        (write-and-verify leaves relative error);
+                     2. retention drift — ``G * (t / t0)^(-nu)`` with
+                        ``t0 = 1 s``, time-parameterized per corner;
+                     3. stuck-at faults — per-device Bernoulli maps,
+                        stuck-at-G_on or stuck-at-G_off (forming faults /
+                        broken filaments), deterministic in the die key;
+                     4. IR drop — first-order attenuation of each row's
+                        contribution by its distance along the bitline
+                        from the sense amp.
+
+All draws key off the ``NonidealSim.key`` (the *die*), never off a
+per-call RNG: the same die reads the same way every forward pass, which
+is what makes corner sweeps of a fixed compiled plan meaningful. The
+whole model is pure-functional jnp, jit-safe, and vmappable over
+``DeviceCorner`` pytrees (``stack_corners``).
+
+Zero-corner contract: a ``NonidealSim`` whose corner magnitudes are all
+zero is **bit-exact** with ``IdealSim`` (and with the fused kernel).
+This is arranged, not lucky: every perturbation is a multiply by a
+factor that is exactly 1.0 (``exp(+-0.0)``, ``1 - 0*x``) or a
+``jnp.where`` on an all-False mask at zero magnitude, and the float32
+column-sum einsum is exact because every partial sum is an integer below
+2^24 (|slice| <= 127, inputs <= 255, <= 512 rows: max 16.6M < 2^24).
+``tests/test_nonideal_backend.py`` pins all of it.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceCorner:
+    """One die's nonideality magnitudes. All-zero (the default) is the
+    nominal corner, bit-exact with the ideal sim. Fields are pytree data
+    (python floats or traced scalars), so corners stack and vmap."""
+    program_sigma: float = 0.0   # lognormal conductance write error (rel.)
+    drift_nu: float = 0.0        # retention drift exponent
+    drift_time: float = 0.0      # seconds since programming (t0 = 1 s)
+    stuck_rate: float = 0.0      # per-device stuck-at fault probability
+    stuck_on_frac: float = 0.5   # of stuck devices, fraction at G_on
+    ir_drop_alpha: float = 0.0   # bitline attenuation at the far row
+
+
+# Named corners for the fig15/table4 sweeps and `serve --device-corner`.
+# 1sigma ~ a typical production die (write-verify to ~3% conductance,
+# ~1e-3 fault density, day-scale retention); 3sigma ~ a tail die.
+NOMINAL = DeviceCorner()
+SIGMA1 = DeviceCorner(program_sigma=0.03, drift_nu=0.01, drift_time=1e5,
+                      stuck_rate=1e-3, ir_drop_alpha=0.02)
+SIGMA3 = DeviceCorner(program_sigma=0.09, drift_nu=0.03, drift_time=1e5,
+                      stuck_rate=5e-3, ir_drop_alpha=0.06)
+CORNERS: dict[str, DeviceCorner] = {
+    "nominal": NOMINAL, "1sigma": SIGMA1, "3sigma": SIGMA3,
+}
+
+
+def corner(name: str) -> DeviceCorner:
+    """Look up a named corner (``'nominal'`` / ``'1sigma'`` / ``'3sigma'``)."""
+    if name not in CORNERS:
+        raise ValueError(f"unknown device corner {name!r}; "
+                         f"have {sorted(CORNERS)}")
+    return CORNERS[name]
+
+
+def stack_corners(corners_: list[DeviceCorner] | tuple[DeviceCorner, ...]
+                  ) -> DeviceCorner:
+    """Stack corners leaf-wise into one vmappable DeviceCorner pytree."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+        *corners_)
+
+
+class ProgrammedPlanes(NamedTuple):
+    """The programmed array: per-plane (G+, G-) conductances plus the
+    stuck-at fault maps (None for the ideal sim). ``gp``/``gn`` are
+    (n_slices, n_seg, rows_per_xbar, cols); fault maps add a leading
+    device axis of 2 (positive / negative ReRAM of each 2T2R pair)."""
+    gp: jnp.ndarray
+    gn: jnp.ndarray
+    stuck_on: jnp.ndarray | None = None
+    stuck_off: jnp.ndarray | None = None
+
+
+class CrossbarBackend(abc.ABC):
+    """Abstract analog array: write-once (``program``), read-many
+    (``read``). Implementations must be pure functions of their inputs
+    and their own fields — no internal state, so the whole datapath
+    stays jit/vmap-safe."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def program(self, planes: jnp.ndarray, *,
+                rows: int | None = None) -> ProgrammedPlanes:
+        """Program signed slice planes (n_slices, n_seg, R, C) into
+        (G+, G-) conductance arrays. ``rows`` is the true (unpadded)
+        input length: simulation-padding rows beyond it hold no physical
+        devices, so nonidealities never touch them."""
+
+    @abc.abstractmethod
+    def read(self, prog: ProgrammedPlanes, x_slice: jnp.ndarray,
+             j: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Analog column sums of one input slice against plane ``j``.
+        x_slice: (B, n_seg, R) unsigned slice values. Returns
+        (pos, neg) of shape (B, n_seg, C) — their difference is the
+        column sum the ADC converts."""
+
+
+class IdealSim(CrossbarBackend):
+    """The exact integer 2T2R model (the repo's historical behavior).
+    ``crossbar.forward`` treats this backend as fused-kernel eligible."""
+
+    name = "ideal"
+
+    def program(self, planes: jnp.ndarray, *,
+                rows: int | None = None) -> ProgrammedPlanes:
+        p = jnp.asarray(planes).astype(jnp.int32)
+        return ProgrammedPlanes(gp=jnp.maximum(p, 0), gn=jnp.maximum(-p, 0))
+
+    def read(self, prog: ProgrammedPlanes, x_slice: jnp.ndarray,
+             j: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        x = x_slice.astype(jnp.int32)
+        pos = jnp.einsum("bsr,src->bsc", x, prog.gp[j],
+                         preferred_element_type=jnp.int32)
+        neg = jnp.einsum("bsr,src->bsc", x, prog.gn[j],
+                         preferred_element_type=jnp.int32)
+        return pos, neg
+
+
+IDEAL = IdealSim()
+
+
+@dataclasses.dataclass(frozen=True)
+class NonidealSim(CrossbarBackend):
+    """One ReRAM die: a ``DeviceCorner`` plus the die key that seeds its
+    fault maps and write-error draws. Deterministic — the same
+    (corner, key) pair programs the identical die every time."""
+
+    corner: DeviceCorner = NOMINAL
+    key: jax.Array | None = None
+
+    name = "nonideal"
+
+    def _key(self) -> jax.Array:
+        return self.key if self.key is not None else jax.random.key(0)
+
+    def program(self, planes: jnp.ndarray, *,
+                rows: int | None = None) -> ProgrammedPlanes:
+        planes = jnp.asarray(planes)
+        n_w, n_seg, R, C = planes.shape
+        p = planes.astype(jnp.float32)
+        gp, gn = jnp.maximum(p, 0.0), jnp.maximum(-p, 0.0)
+        c = self.corner
+        kp, kn, kfp, kfn, kop, kon = jax.random.split(self._key(), 6)
+
+        # 1. conductance program error: per-device lognormal. sigma = 0
+        #    multiplies by exp(+-0.0) == 1.0 exactly.
+        sigma = jnp.asarray(c.program_sigma, jnp.float32)
+        gp = gp * jnp.exp(sigma * jax.random.normal(kp, p.shape, jnp.float32))
+        gn = gn * jnp.exp(sigma * jax.random.normal(kn, p.shape, jnp.float32))
+
+        # 2. retention drift: G(t) = G0 * (t/t0)^(-nu), t0 = 1 s, clamped
+        #    to t >= t0 (no "anti-drift" before one second). nu = 0 gives
+        #    exp(-0.0 * log) == 1.0 exactly.
+        nu = jnp.asarray(c.drift_nu, jnp.float32)
+        t = jnp.maximum(jnp.asarray(c.drift_time, jnp.float32), 1.0)
+        drift = jnp.exp(-nu * jnp.log(t))
+        gp, gn = gp * drift, gn * drift
+
+        # 3. stuck-at fault maps: Bernoulli per physical device, keyed by
+        #    the die. G_on is approximated by the largest programmed
+        #    magnitude in the plane — an all-zero (padding) plane has
+        #    G_on = 0, so the slice-padding contract survives faults; and
+        #    rows beyond `rows` (segment zero-padding) hold no devices.
+        if rows is None:
+            rows = n_seg * R
+        live = (jnp.arange(n_seg * R).reshape(n_seg, R) < rows)[None, :, :, None]
+        rate = jnp.asarray(c.stuck_rate, jnp.float32)
+        onf = jnp.asarray(c.stuck_on_frac, jnp.float32)
+        g_on = jnp.max(jnp.abs(p), axis=(1, 2, 3), keepdims=True)
+
+        def stuck(g, kf, ko):
+            s = (jax.random.uniform(kf, p.shape) < rate) & live
+            on = jax.random.uniform(ko, p.shape) < onf
+            s_on, s_off = s & on, s & ~on
+            g = jnp.where(s_on, g_on, g)
+            g = jnp.where(s_off, 0.0, g)
+            return g, s_on, s_off
+
+        gp, on_p, off_p = stuck(gp, kfp, kop)
+        gn, on_n, off_n = stuck(gn, kfn, kon)
+
+        # 4. IR drop: rows far from the sense amp lose drive along the
+        #    bitline; first-order linear attenuation, alpha = fractional
+        #    loss at the far end. alpha = 0 scales by exactly 1.0.
+        alpha = jnp.asarray(c.ir_drop_alpha, jnp.float32)
+        att = 1.0 - alpha * (jnp.arange(R, dtype=jnp.float32) / max(R - 1, 1))
+        gp = gp * att[None, None, :, None]
+        gn = gn * att[None, None, :, None]
+        return ProgrammedPlanes(
+            gp=gp, gn=gn,
+            stuck_on=jnp.stack([on_p, on_n]),
+            stuck_off=jnp.stack([off_p, off_n]))
+
+    def read(self, prog: ProgrammedPlanes, x_slice: jnp.ndarray,
+             j: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        # float32 is exact here: every partial sum is an integer-valued
+        # quantity below 2^24 at the zero corner (see module docstring).
+        x = x_slice.astype(jnp.float32)
+        pos = jnp.einsum("bsr,src->bsc", x, prog.gp[j])
+        neg = jnp.einsum("bsr,src->bsc", x, prog.gn[j])
+        return pos, neg
+
+
+BACKENDS = ("ideal", "nonideal")
+
+
+def make(name: str, corner_: DeviceCorner | str = "nominal", *,
+         seed: int = 0) -> CrossbarBackend:
+    """Build a backend from config strings (``ArchConfig`` uses this:
+    ``pim_crossbar_backend`` / ``pim_device_corner`` / ``pim_device_seed``)."""
+    if name == "ideal":
+        return IDEAL
+    if name == "nonideal":
+        c = corner_ if isinstance(corner_, DeviceCorner) else corner(corner_)
+        return NonidealSim(corner=c, key=jax.random.key(seed))
+    raise ValueError(f"unknown crossbar backend {name!r}; have {BACKENDS}")

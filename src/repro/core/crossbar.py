@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import adc as adc_lib
+from repro.core import backends as bk
 from repro.core import center_offset as co
 from repro.core import slicing as sl
 
@@ -71,7 +72,9 @@ def forward(x_u8: jnp.ndarray,
             noise_level: float = 0.0,
             key: jax.Array | None = None,
             ideal: bool = False,
-            backend: str | None = None) -> tuple[jnp.ndarray, CrossbarStats]:
+            backend: str | None = None,
+            device: bk.CrossbarBackend | None = None
+            ) -> tuple[jnp.ndarray, CrossbarStats]:
     """Full-fidelity-path crossbar forward (static input slicing, no speculation).
 
     x_u8: (B, rows) unsigned 8b inputs. Returns (psum int32 (B, cols), stats).
@@ -97,16 +100,26 @@ def forward(x_u8: jnp.ndarray,
     meaningful for unpadded encodings (the energy/accounting harnesses all
     build those); use ``repro.models.pim_compile.CompiledPim.report`` for
     per-site convert pricing of padded plans.
+
+    ``device`` selects the analog array model (``repro.core.backends``):
+    ``None`` / ``IdealSim`` is the exact integer 2T2R read (fused-kernel
+    eligible); a ``NonidealSim`` programs the planes once per call with
+    its die's ReRAM nonidealities (program noise, drift, stuck-ats, IR
+    drop) and reads analog (float32) column sums — at an all-zero corner
+    this is bit-exact with the ideal path. Work *stats* are identical for
+    every device: nonidealities change values, never the convert counts.
     """
     B = x_u8.shape[0]
     n_seg, R = enc.n_segments, enc.rows_per_xbar
     in_bounds = sl.slice_bounds(input_slicing, sl.INPUT_BITS)
     planes = jnp.asarray(enc.planes)  # (n_w, n_seg, R, C)
+    dev = device if device is not None else bk.IDEAL
 
     if not ideal:
         adc_lib.check_zero_preserving(adc)  # the padding contract
     noiseless = noise_level == 0.0 or key is None
-    if not ideal and noiseless and backend != "python":
+    if not ideal and noiseless and backend != "python" \
+            and isinstance(dev, bk.IdealSim):
         from repro.kernels import ops as kops
         psum, sats = kops.fused_crossbar_forward(
             x_u8, planes, enc.shifts, jnp.asarray(enc.centers),
@@ -121,6 +134,7 @@ def forward(x_u8: jnp.ndarray,
         return psum, stats
 
     xs = _segment_inputs(x_u8, n_seg, R)  # (B, n_seg, R)
+    prog = dev.program(planes, rows=enc.rows)
 
     psum = co.center_term(x_u8, enc)  # (B, C) int32 — digital center term
     total_converts = 0
@@ -132,10 +146,11 @@ def forward(x_u8: jnp.ndarray,
         x_sl = sl.crop_unsigned(xs, hi, li)  # (B, n_seg, R)
         for j in range(enc.n_slices):
             lw = enc.shifts[j]
-            pos, neg = column_sums(x_sl, planes[j])
+            pos, neg = dev.read(prog, x_sl, j)
             cs = pos - neg
             if ideal:
-                val = cs
+                val = cs if jnp.issubdtype(cs.dtype, jnp.integer) \
+                    else jnp.round(cs).astype(jnp.int32)
             else:
                 val, sat = adc_lib.convert(
                     cs, adc, noise_level=noise_level,

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adc as adc_lib
+from repro.core import backends as bk
 from repro.core import center_offset as co
 from repro.core import crossbar as xbar
 from repro.core import slicing as sl
@@ -53,6 +54,13 @@ class PimPlan:
     # 'pallas-tpu' | ...; 'python' forces the crossbar reference loop).
     # None defers to the call site / 'auto'.
     kernel_backend: str | None = None
+    # analog array model for the exact path (repro.core.backends): None /
+    # IdealSim = exact integer read (fused-kernel eligible); NonidealSim =
+    # a ReRAM die with program noise / drift / stuck-ats / IR drop. A
+    # nonideal device forces static input slicing — speculation's
+    # recovery rule assumes an ideal saturation signal, so modelling it
+    # on a faulty die is future work (ROADMAP).
+    device: bk.CrossbarBackend | None = None
     # fast (TPU-native) path: asymmetric centered quantization, Eq. 1 in float
     fast_w_off: np.ndarray | None = None    # int8 offsets (rows, cols)
     fast_centers: np.ndarray | None = None  # int32 per-column centers
@@ -105,20 +113,20 @@ def _accumulate_int(x_q: jnp.ndarray, plan: PimPlan, *,
     stats = []
     acc = jnp.zeros((x_q.shape[0], plan.enc.cols), jnp.int32)
     passes = _unsigned_passes(x_q, plan.lq.x_signed)
+    nonideal = isinstance(plan.device, bk.NonidealSim)
     for i, (sign, xp) in enumerate(passes):
         k = None if key is None else jax.random.fold_in(key, i)
-        if plan.speculation:
+        if plan.speculation and not nonideal:
             # data-dependent recovery: stays on the Python datapath
             psum, st = spec.forward(xp, plan.enc, plan.spec_slicing, plan.adc,
                                     noise_level=noise_level, key=k)
-        elif input_slicing is None:
-            psum, st = xbar.forward(xp, plan.enc, (1,) * sl.INPUT_BITS, plan.adc,
-                                    noise_level=noise_level, key=k,
-                                    backend=plan.kernel_backend)
         else:
-            psum, st = xbar.forward(xp, plan.enc, input_slicing, plan.adc,
+            in_sl = (1,) * sl.INPUT_BITS if input_slicing is None \
+                else input_slicing
+            psum, st = xbar.forward(xp, plan.enc, in_sl, plan.adc,
                                     noise_level=noise_level, key=k,
-                                    backend=plan.kernel_backend)
+                                    backend=plan.kernel_backend,
+                                    device=plan.device)
         acc = acc + sign * psum
         stats.append(st)
     # unsigned-weight-domain -> signed int8 weight domain: w_q = w_u - 128
@@ -132,7 +140,13 @@ def forward_exact(x: jnp.ndarray, plan: PimPlan, *,
                   noise_level: float = 0.0,
                   key: jax.Array | None = None,
                   return_stats: bool = False):
-    """Float-in / float-out exact accelerator simulation."""
+    """Float-in / float-out exact accelerator simulation.
+
+    ``plan.device`` picks the analog array model (``core.backends``): a
+    ``NonidealSim`` die reads through its programmed nonidealities (and
+    forces static input slicing — see ``PimPlan.device``); the default
+    ideal device keeps the historical bit-exact datapath.
+    """
     if plan.lq.x_signed:
         x_q = jnp.clip(jnp.round(x / plan.lq.x_scale), -127, 127).astype(jnp.int32)
     else:

@@ -14,7 +14,10 @@ simulation, ``--pim int8`` the ideal 8b-quantized reference — see
 ``benchmarks/serve_pim.py`` for the throughput comparison.
 ``--pim-slicing adaptive`` runs the paper's Algorithm 1 per projection
 site (printing the slice-count histogram and per-site table);
-``--pim-slicing 4,2,2`` pins every site. See
+``--pim-slicing 4,2,2`` pins every site. ``--device-corner 3sigma``
+(with ``--pim exact``) serves on a nonideal ReRAM die — the
+``repro.core.backends`` device model with program noise, drift,
+stuck-at faults, and IR drop at the named corner. See
 ``benchmarks/compile_report.py`` for the Titanium-Law pricing of the
 compiled plan.
 """
@@ -68,6 +71,16 @@ def main() -> None:
     ap.add_argument("--pim-slicing", default=None,
                     help="'adaptive' (Algorithm 1 per projection site) or "
                          "a comma tuple like '4,2,2' pinning every site")
+    ap.add_argument("--device-corner", default=None,
+                    choices=("nominal", "1sigma", "3sigma"),
+                    help="run --pim exact on a nonideal ReRAM die "
+                         "(repro.core.backends.NonidealSim): conductance "
+                         "program noise, retention drift, stuck-at fault "
+                         "maps, IR drop at the named corner. 'nominal' is "
+                         "the all-zero corner (bit-exact with the ideal "
+                         "sim — the zero-corner contract)")
+    ap.add_argument("--device-seed", type=int, default=0,
+                    help="die seed for --device-corner fault/noise maps")
     ap.add_argument("--kernel-backend", default=None,
                     choices=("auto", "xla", "interpret", "pallas",
                              "pallas-tpu", "pallas-gpu", "python"),
@@ -86,6 +99,16 @@ def main() -> None:
         if cfg.pim_mode == "off":
             ap.error("--kernel-backend requires --pim fast|exact|int8")
         cfg = dataclasses.replace(cfg, pim_kernel_backend=args.kernel_backend)
+    if args.device_corner is not None:
+        if cfg.pim_mode != "exact":
+            ap.error("--device-corner requires --pim exact (only the "
+                     "bit-exact accelerator simulation models the analog "
+                     "array)")
+        cfg = dataclasses.replace(cfg, pim_crossbar_backend="nonideal",
+                                  pim_device_corner=args.device_corner,
+                                  pim_device_seed=args.device_seed)
+        print(f"device corner: {args.device_corner} "
+              f"(die seed {args.device_seed}, nonideal ReRAM array)")
     if args.pim_slicing is not None:
         if cfg.pim_mode == "off":
             ap.error("--pim-slicing requires --pim fast|exact|int8 "

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import adc as adc_lib
+from repro.core import backends as device_backends
 from repro.core import center_offset as co
 from repro.core import pim_linear
 from repro.dist import shard
@@ -78,6 +79,9 @@ def _plan_to_pim_plan(plan: dict, cfg: ArchConfig, rows: int) -> pim_linear.PimP
         adc=adc_lib.ADCConfig(bits=cfg.pim_adc_bits, signed=True),
         speculation=cfg.pim_speculation,
         kernel_backend=cfg.pim_kernel_backend,
+        device=device_backends.make(cfg.pim_crossbar_backend,
+                                    cfg.pim_device_corner,
+                                    seed=cfg.pim_device_seed),
         fast_w_off=plan.get("w_off"), fast_centers=plan.get("centers"),
         fast_scale=plan.get("scale"))
 

@@ -6,8 +6,10 @@ installed (hermetic CI images), so property tests still collect and run.
 The fallback draws a fixed number of examples per test — the strategy
 bounds first, then seeded-random interior points — which keeps the
 property tests meaningful (boundaries are where quantization code
-breaks) and perfectly reproducible. With real hypothesis installed this
-module does nothing.
+breaks) and perfectly reproducible. The ``HYPOTHESIS_SEED`` env var
+(default ``0``) seeds the interior draws; CI runs the statistical suite
+under a small seed matrix so a pass never hinges on one lucky stream.
+With real hypothesis installed this module does nothing.
 
 Only the API surface the repo's tests use is implemented: ``given``,
 ``settings``, ``assume``, ``HealthCheck``, and the ``integers`` /
@@ -18,6 +20,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
@@ -94,7 +97,8 @@ def install_hypothesis_fallback() -> bool:
             def wrapper(*args, **kwargs):
                 cfg = getattr(wrapper, "_hyp_settings", {})
                 n = int(cfg.get("max_examples", 20))
-                rng = random.Random(0)
+                rng = random.Random(
+                    int(os.environ.get("HYPOTHESIS_SEED", "0")))
                 cols = [s.examples(rng, n) for s in strategies]
                 for drawn in zip(*cols):
                     try:

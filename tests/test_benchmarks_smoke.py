@@ -18,8 +18,14 @@ from benchmarks.run import REGISTRY  # noqa: E402
 
 def test_registry_covers_expected_entries():
     for name in ("lm_on_pim", "serve_pim", "serve_continuous",
-                 "compile_report"):
+                 "compile_report", "fig15_corners", "table4_corners"):
         assert name in REGISTRY
+
+
+def test_corner_entries_point_at_device_corner_sweeps():
+    for name in ("fig15_corners", "table4_corners"):
+        assert REGISTRY[name].attr == "run_device_corners"
+        assert "corners" in REGISTRY[name].smoke_kwargs
 
 
 @pytest.mark.parametrize("name", sorted(REGISTRY))
