@@ -129,6 +129,16 @@ REGISTRY: dict[str, Entry] = {
                   f"({o['throughput_ratio_fast_over_off']}x), token "
                   f"agreement {o['token_agreement']}",
         smoke_kwargs=dict(requests=2, steps=4)),
+    "serve_pim_spec": Entry(
+        "serve_pim",
+        lambda o: f"exact+speculation decode "
+                  f"{o['adc_converts_per_token']:.1f} converts/token vs "
+                  f"{o['no_spec_converts_per_token']:.1f} no-spec "
+                  f"({o['convert_ratio_vs_no_spec']}x), failure rate "
+                  f"{o['spec_failure_rate']}, "
+                  f"{o['decode_tok_per_s']:.1f} tok/s",
+        smoke_kwargs=dict(requests=2, steps=3, prompt_len=4),
+        attr="run_speculation"),
 }
 
 

@@ -76,13 +76,95 @@ def run(arch: str = "yi-6b", requests: int = 4, prompt_len: int = 8,
     return out
 
 
+def run_speculation(arch: str = "yi-6b", requests: int = 2,
+                    prompt_len: int = 6, steps: int = 4, seed: int = 0,
+                    adc_bits: int = 7,
+                    kernel_backend: str | None = None) -> dict:
+    """Converts/token on a real decode trace: ``pim_mode='exact'`` with
+    speculation (paper §4.3) in the jitted decode step.
+
+    The decode step runs under ``layers.collect_pim_stats``: every
+    exact-path projection's ``SpeculationStats`` is collected at trace
+    time (scanned blocks re-emit totals as scan outputs) and the summed
+    work counters ride the jitted step as auxiliary outputs — ADC
+    converts, speculation failures/attempts and the no-speculation
+    baseline per decoded token, the serve-time face of the paper's
+    Fig. 14 convert economy. Speculation runs the fused
+    ``fused_spec_crossbar`` kernel (recovery converts billed
+    analytically from the failure mask), so exact+speculation decode is
+    one kernel launch per projection pass, same as the static path.
+    """
+    if steps < 2:
+        raise ValueError("steps >= 2: one greedy token from prefill plus "
+                         "at least one timed decode step")
+    from repro.models import layers as L
+    cfg = configs.get(arch).reduced()
+    cfg = dataclasses.replace(cfg, pim_mode="exact", pim_speculation=True,
+                              pim_adc_bits=adc_bits,
+                              pim_kernel_backend=kernel_backend or "auto")
+    params, _ = T.init_params(cfg, jax.random.key(seed))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(seed + 1), (requests, prompt_len), 0, cfg.vocab_size))
+    plans, _ = pim.prepare_pim_params(params, cfg, prompts)
+
+    def step(p, pl, st, tok):
+        with L.collect_pim_stats() as acc:
+            logits, st2 = T.decode_step(p, cfg, st, tok, plans=pl)
+            totals = L.pim_stats_totals(acc)
+        return logits, st2, totals
+
+    step_j = jax.jit(step)
+    prefill_j = jax.jit(lambda p, pl, toks: T.prefill(
+        p, cfg, toks, max_len=prompt_len + steps + 1, plans=pl))
+    logits, state = prefill_j(params, plans, jnp.asarray(prompts))
+    tok = jnp.argmax(logits[:, -1, :], -1)[:, None]
+    step_j(params, plans, state, tok)  # warm the decode jit
+    totals = dict.fromkeys(L.PIM_STAT_KEYS, 0)
+    t0 = time.monotonic()
+    for _ in range(steps - 1):
+        logits, state, tot = step_j(params, plans, state, tok)
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None]
+        for k in totals:
+            totals[k] += int(tot[k])
+    dt = time.monotonic() - t0
+    tokens = requests * (steps - 1)
+    converts = totals["adc_converts"]
+    no_spec = totals["no_spec_converts"]
+    return {
+        "arch": cfg.name, "requests": requests, "steps": steps,
+        "adc_bits": adc_bits,
+        "decode_tok_per_s": round(tokens / dt, 1),
+        "adc_converts_per_token": round(converts / tokens, 1),
+        "no_spec_converts_per_token": round(no_spec / tokens, 1),
+        "convert_ratio_vs_no_spec": round(converts / max(no_spec, 1), 4),
+        "spec_failure_rate": round(
+            totals["spec_failures"] / max(totals["spec_attempts"], 1), 5),
+        "recovery_saturations": totals["recovery_saturations"],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--speculation", action="store_true",
+                    help="run the exact-mode speculation converts/token "
+                         "report instead of the fast-vs-off throughput "
+                         "comparison")
     args = ap.parse_args()
+    if args.speculation:
+        out = run_speculation(args.arch, args.requests, args.prompt_len,
+                              args.steps)
+        print(f"{out['arch']}: {args.requests} requests x {args.steps} steps "
+              f"(exact + speculation, {out['adc_bits']}b ADC)")
+        print(f"  {out['decode_tok_per_s']:8.1f} tok/s decode")
+        print(f"  {out['adc_converts_per_token']:.1f} converts/token vs "
+              f"{out['no_spec_converts_per_token']:.1f} no-spec "
+              f"({out['convert_ratio_vs_no_spec']}x), failure rate "
+              f"{out['spec_failure_rate']}")
+        return
     out = run(args.arch, args.requests, args.prompt_len, args.steps)
     print(f"{out['arch']}: {args.requests} requests x {args.steps} steps")
     for mode in ("off", "fast"):

@@ -34,15 +34,34 @@ from repro.core import slicing as sl
 @dataclasses.dataclass
 class CrossbarStats:
     """Fidelity / work counters for one forward pass (python-side, jit-safe)."""
-    adc_converts: jnp.ndarray        # scalar int — ADC conversions performed
+    adc_converts: int                # ADC conversions performed (exact Python int)
     saturations: jnp.ndarray         # scalar int — saturated conversions
-    conversions_possible: jnp.ndarray  # scalar int — converts a no-spec design needs
+    conversions_possible: int        # converts a no-spec design needs
     macs: int                        # logical 8b MACs computed
+
+
+def work_dtype() -> jnp.dtype:
+    """Accumulator dtype for data-dependent work counters.
+
+    Shape-static counters (converts, attempts, MACs) are exact Python
+    ints, immune to overflow. Traced accumulations (saturation / failure
+    counts) use int64 when ``jax_enable_x64`` is on; otherwise jnp would
+    *silently* downcast an explicit int64 back to int32, so int32 is the
+    honest ceiling there.
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 def _segment_inputs(x_u8: jnp.ndarray, n_seg: int, rows_per_xbar: int) -> jnp.ndarray:
     """(..., rows) -> (..., n_seg, rows_per_xbar) zero-padded."""
     pad = n_seg * rows_per_xbar - x_u8.shape[-1]
+    if pad < 0:
+        raise ValueError(
+            f"input rows {x_u8.shape[-1]} exceed the crossbar capacity "
+            f"{n_seg} segments x {rows_per_xbar} rows = "
+            f"{n_seg * rows_per_xbar}: the encoding was built for fewer "
+            "rows than this input carries (shape mismatch between x and "
+            "the EncodedWeights it is paired with)")
     xp = jnp.pad(x_u8.astype(jnp.int32), [(0, 0)] * (x_u8.ndim - 1) + [(0, pad)])
     return xp.reshape(x_u8.shape[:-1] + (n_seg, rows_per_xbar))
 
@@ -117,19 +136,24 @@ def forward(x_u8: jnp.ndarray,
 
     if not ideal:
         adc_lib.check_zero_preserving(adc)  # the padding contract
-    noiseless = noise_level == 0.0 or key is None
-    if not ideal and noiseless and backend != "python" \
+    if noise_level and key is None:
+        raise ValueError(
+            f"noise_level={noise_level} requires a PRNG key: pass key= "
+            "(silently running noiseless would drop the requested noise)")
+    if not ideal and noise_level == 0.0 and backend != "python" \
             and isinstance(dev, bk.IdealSim):
         from repro.kernels import ops as kops
         psum, sats = kops.fused_crossbar_forward(
             x_u8, planes, enc.shifts, jnp.asarray(enc.centers),
             input_slicing=tuple(int(b) for b in input_slicing),
             adc_lo=adc.lo, adc_hi=adc.hi, rows_per_xbar=R, backend=backend)
+        # shape-static counters stay exact Python ints: B * seg * cols *
+        # slices * slices overflows int32 at production scales
         total = B * n_seg * enc.cols * len(in_bounds) * enc.n_slices
         stats = CrossbarStats(
-            adc_converts=jnp.asarray(total, jnp.int32),
-            saturations=sats.astype(jnp.int32),
-            conversions_possible=jnp.asarray(total, jnp.int32),
+            adc_converts=total,
+            saturations=sats.astype(work_dtype()),
+            conversions_possible=total,
             macs=B * enc.rows * enc.cols)
         return psum, stats
 
@@ -138,7 +162,7 @@ def forward(x_u8: jnp.ndarray,
 
     psum = co.center_term(x_u8, enc)  # (B, C) int32 — digital center term
     total_converts = 0
-    saturations = jnp.zeros((), jnp.int32)
+    saturations = jnp.zeros((), work_dtype())
     n_keys = len(in_bounds) * enc.n_slices
     keys = (jax.random.split(key, n_keys) if key is not None else [None] * n_keys)
     ki = 0
@@ -155,14 +179,14 @@ def forward(x_u8: jnp.ndarray,
                 val, sat = adc_lib.convert(
                     cs, adc, noise_level=noise_level,
                     pos_sum=pos, neg_sum=neg, key=keys[ki])
-                saturations = saturations + sat.sum()
+                saturations = saturations + sat.sum(dtype=work_dtype())
             ki += 1
             psum = psum + (val.sum(axis=1) << (li + lw))
             total_converts += B * n_seg * enc.cols
     stats = CrossbarStats(
-        adc_converts=jnp.asarray(total_converts, jnp.int32),
+        adc_converts=total_converts,
         saturations=saturations,
-        conversions_possible=jnp.asarray(total_converts, jnp.int32),
+        conversions_possible=total_converts,
         macs=B * enc.rows * enc.cols)
     return psum, stats
 

@@ -117,9 +117,12 @@ def _accumulate_int(x_q: jnp.ndarray, plan: PimPlan, *,
     for i, (sign, xp) in enumerate(passes):
         k = None if key is None else jax.random.fold_in(key, i)
         if plan.speculation and not nonideal:
-            # data-dependent recovery: stays on the Python datapath
+            # noiseless: the fused speculate/recover kernel (the failure
+            # mask prices recovery converts analytically); noisy: the
+            # Python loop (the per-conversion noise model is stateful)
             psum, st = spec.forward(xp, plan.enc, plan.spec_slicing, plan.adc,
-                                    noise_level=noise_level, key=k)
+                                    noise_level=noise_level, key=k,
+                                    backend=plan.kernel_backend)
         else:
             in_sl = (1,) * sl.INPUT_BITS if input_slicing is None \
                 else input_slicing

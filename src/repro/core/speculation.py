@@ -9,8 +9,21 @@ total for 3+8), but ADCs only convert — i.e. only *count work* — for columns
 that failed speculation. If recovery itself saturates (rare) the saturated
 value is accepted and propagated (paper §3.4).
 
+At noise 0 the whole speculate/recover pass runs as ONE fused kernel op
+(``repro.kernels.ops.fused_spec_crossbar_forward``: in-kernel spec-slice
+cropping, per-segment ADC clamp, failure detection, 1b recovery converts,
+select, shift+add, center term) — bit-exact vs the Python loop below,
+which remains the oracle (``backend='python'``) and the noisy path.
+Recovery-convert counts are derived *analytically* from the per-spec-slice
+failure counts the kernel returns: ``converts = attempts + sum_i width_i *
+failures_i`` — exactly what the loop accumulates.
+
 The functional result is bit-exact with hardware; ADC-convert counts are the
-quantity the Titanium Law energy model consumes.
+quantity the Titanium Law energy model consumes. Counters that are pure
+shape arithmetic (attempts, the no-speculation baseline, MACs) are exact
+Python ints — at production batch x column x slice scales they overflow
+int32 (the historical dtype); data-dependent counters accumulate in
+``crossbar.work_dtype()`` (int64 under ``jax_enable_x64``, else int32).
 """
 
 from __future__ import annotations
@@ -33,9 +46,9 @@ RECOVERY_BITS = 1         # paper: eight 1b recovery slices
 @dataclasses.dataclass
 class SpeculationStats:
     adc_converts: jnp.ndarray          # converts actually performed (spec + recovery)
-    no_spec_converts: jnp.ndarray      # converts a recovery-only design would need
+    no_spec_converts: int              # converts a recovery-only design would need
     spec_failures: jnp.ndarray         # failed (column x spec-slice) conversions
-    spec_attempts: jnp.ndarray
+    spec_attempts: int
     recovery_saturations: jnp.ndarray  # accepted fidelity losses
     cycles: int                        # crossbar cycles consumed (3 spec + 8 rec = 11)
     macs: int
@@ -51,24 +64,68 @@ def forward(x_u8: jnp.ndarray,
             adc: adc_lib.ADCConfig = adc_lib.RAELLA_ADC,
             *,
             noise_level: float = 0.0,
-            key: jax.Array | None = None) -> tuple[jnp.ndarray, SpeculationStats]:
+            key: jax.Array | None = None,
+            backend: str | None = None,
+            valid: jnp.ndarray | None = None
+            ) -> tuple[jnp.ndarray, SpeculationStats]:
     """Speculative crossbar forward. x_u8: (B, rows) -> (psum (B, cols), stats).
 
-    Padded slice planes (see ``crossbar.forward``) are numerically inert
-    but still counted by the work stats — convert/cycle accounting is only
-    meaningful for unpadded encodings.
+    ``backend`` selects the kernel backend for the noiseless fused path
+    per the ``repro.kernels.ops`` registry rules ('xla' / 'interpret' /
+    'pallas-tpu' / 'auto', env-overridable); ``backend='python'`` forces
+    the reference loop below (the oracle the differential tests compare
+    against). Noisy runs always use the loop and require a ``key``.
+
+    ``valid`` optionally masks padded slice planes (PR 4's ragged
+    per-site plans): masked planes are zeroed — numerically inert under
+    a zero-preserving ADC — but still counted by the work stats on both
+    paths; convert/cycle accounting is only meaningful for unpadded
+    encodings.
     """
+    if noise_level and key is None:
+        raise ValueError(
+            f"noise_level={noise_level} requires a PRNG key: pass key= "
+            "(silently running noiseless would drop the requested noise)")
+    adc_lib.check_zero_preserving(adc)  # the padding contract
     B = x_u8.shape[0]
     n_seg, R = enc.n_segments, enc.rows_per_xbar
-    xs = xbar._segment_inputs(x_u8, n_seg, R)
     planes = jnp.asarray(enc.planes)
+    if valid is not None:
+        planes = planes * valid[:, None, None, None].astype(planes.dtype)
     spec_bounds = sl.slice_bounds(spec_slicing, sl.INPUT_BITS)
+    wd = xbar.work_dtype()
 
+    # shape-static work counters: exact Python ints (immune to int32
+    # overflow at production batch x column x slice scales)
+    n_cols = B * n_seg * enc.cols
+    attempts = n_cols * len(spec_bounds) * enc.n_slices
+    no_spec = n_cols * sl.INPUT_BITS * enc.n_slices
+    cycles = len(spec_slicing) + sl.INPUT_BITS
+    macs = B * enc.rows * enc.cols
+
+    if noise_level == 0.0 and backend != "python":
+        from repro.kernels import ops as kops
+        psum, fails, rec_sats = kops.fused_spec_crossbar_forward(
+            x_u8, planes, enc.shifts, jnp.asarray(enc.centers),
+            spec_slicing=tuple(int(b) for b in spec_slicing),
+            adc_lo=adc.lo, adc_hi=adc.hi, rows_per_xbar=R,
+            backend=backend)
+        widths = jnp.asarray([hi - lo + 1 for (hi, lo) in spec_bounds], wd)
+        fails = fails.astype(wd)
+        stats = SpeculationStats(
+            adc_converts=attempts + (widths * fails).sum(),
+            no_spec_converts=no_spec,
+            spec_failures=fails.sum(),
+            spec_attempts=attempts,
+            recovery_saturations=rec_sats.astype(wd),
+            cycles=cycles, macs=macs)
+        return psum, stats
+
+    xs = xbar._segment_inputs(x_u8, n_seg, R)
     psum = co.center_term(x_u8, enc)
-    converts = jnp.zeros((), jnp.int32)
-    failures = jnp.zeros((), jnp.int32)
-    attempts = jnp.zeros((), jnp.int32)
-    rec_sats = jnp.zeros((), jnp.int32)
+    rec_converts = jnp.zeros((), wd)   # recovery converts actually billed
+    failures = jnp.zeros((), wd)
+    rec_sats = jnp.zeros((), wd)
 
     n_keys = sum(1 + w for w in spec_slicing) * enc.n_slices
     keys = (jax.random.split(key, n_keys) if key is not None else [None] * n_keys)
@@ -93,21 +150,18 @@ def forward(x_u8: jnp.ndarray,
                     pos_sum=rpos, neg_sum=rneg, key=keys[ki])
                 ki += 1
                 rec_total = rec_total + (rval << b)
-                rec_sats = rec_sats + (rsat & spec_sat).sum()
+                rec_sats = rec_sats + (rsat & spec_sat).sum(dtype=wd)
             value = jnp.where(spec_sat, rec_total, spec_val)
             psum = psum + (value.sum(axis=1) << (li + lw))
             # work accounting (per paper: recovery ADCs power-gated on success)
-            n_cols = B * n_seg * enc.cols
-            attempts = attempts + n_cols
-            failures = failures + spec_sat.sum()
-            converts = converts + n_cols + width * spec_sat.sum()
+            failures = failures + spec_sat.sum(dtype=wd)
+            rec_converts = rec_converts + width * spec_sat.sum(dtype=wd)
     stats = SpeculationStats(
-        adc_converts=converts,
-        no_spec_converts=jnp.asarray(
-            B * n_seg * enc.cols * sl.INPUT_BITS * enc.n_slices, jnp.int32),
+        adc_converts=attempts + rec_converts,
+        no_spec_converts=no_spec,
         spec_failures=failures,
         spec_attempts=attempts,
         recovery_saturations=rec_sats,
-        cycles=len(spec_slicing) + sl.INPUT_BITS,
-        macs=B * enc.rows * enc.cols)
+        cycles=cycles,
+        macs=macs)
     return psum, stats

@@ -1,0 +1,214 @@
+"""Pallas TPU kernel: speculation + recovery (paper §4.3) in one launch.
+
+``fused_crossbar.py`` fused the *static*-slicing exact datapath; this
+kernel does the same for Dynamic Input Slicing, whose recovery pass is
+data-dependent (it replaces exactly the conversions that saturated). One
+``pallas_call`` performs, per (batch-tile, col-tile, segment, spec-slice
+i, weight-slice j) grid step:
+
+  1. the speculative pass — the i-th spec slice (default 4b-2b-2b) is
+     cropped in-kernel with a shift+mask, contracted against the j-th
+     weight plane, and clamped by the per-segment signed ADC;
+  2. the failure mask — a clamp that hit either ADC bound is a failed
+     speculation (paper §3.4: saturation *is* the detection signal);
+  3. the recovery pass, unrolled over the slice's bit positions — the
+     same input rows re-sliced as 1b planes, each converted and
+     recombined with ``rmults[i, t] = 1 << t`` (0 kills bit positions
+     past the slice's true width, so one unroll length serves ragged
+     spec slicings);
+  4. the select: recovered values replace failed speculative ones, then
+     the digital shift+add via ``mults[i, j] = valid_j << (l_i + l_j)``;
+  5. work accounting, analytically from the mask: per-spec-slice failure
+     counts (lane-accumulated into a resident (1, n_i) output so the
+     host can bill ``width_i`` recovery converts per failure — ADCs for
+     columns that speculated successfully are power-gated) and the
+     recovery-saturation count (accepted fidelity losses), both masked
+     to the true (B, C) extent so tile padding never inflates them;
+  6. the digital center term ``phi * sum(x)``, once per segment.
+
+The crossbar always runs every recovery cycle — the kernel mirrors the
+hardware by always computing the recovery dots — but only *failed*
+columns consume ADC converts, which is what ``SpeculationStats`` bills.
+Bit-exact vs the ``core.speculation.forward`` Python loop at noise 0:
+in-range column sums are far below 2^24 so ``adc.convert``'s float32
+round is the identity on them.
+
+Grid: (B/bm, C/bn, n_seg, n_i, n_j) — the input block's index map
+ignores (c, i, j), so Pallas keeps it resident while every spec slice
+and recovery bit is cropped from it; the psum accumulates in a VMEM
+scratch and flushes once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_XBAR = 512
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+
+
+def _kernel(x_ref, w_ref, li_ref, mask_ref, mult_ref, rmult_ref, cen_ref,
+            o_ref, fail_ref, rsat_ref, acc_ref, *,
+            n_seg: int, n_i: int, n_j: int, max_w: int,
+            adc_lo: int, adc_hi: int,
+            bm: int, bn: int, b_true: int, c_true: int, narrow: bool):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    s = pl.program_id(2)
+    i = pl.program_id(3)
+    j = pl.program_id(4)
+    first = (s == 0) & (i == 0) & (j == 0)
+
+    @pl.when(first)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(first & (b == 0) & (c == 0))
+    def _init_counters():
+        fail_ref[...] = jnp.zeros_like(fail_ref)
+        rsat_ref[0, 0] = jnp.zeros((), jnp.int32)
+
+    x = x_ref[...]  # (bm, rows_per_xbar) int32, unsigned 8b codes
+    w = w_ref[0]    # (rows_per_xbar, bn) int8 signed plane
+
+    # digital center term: phi * sum_r(x), once per (b, c, s)
+    @pl.when((i == 0) & (j == 0))
+    def _center():
+        acc_ref[...] += x.sum(axis=1, keepdims=True) * cen_ref[0]
+
+    li = li_ref[0, 0]
+
+    # --- speculative pass: crop slice i, contract, per-segment ADC clamp
+    x_i = jax.lax.shift_right_logical(x, li) & mask_ref[0, 0]
+    if narrow:  # every spec-slice value < 128 -> int8 x int8 MXU dot
+        cs = jax.lax.dot(x_i.astype(jnp.int8), w,
+                         preferred_element_type=jnp.int32)
+    else:
+        cs = jax.lax.dot(x_i, w.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+    cs = jnp.clip(cs, adc_lo, adc_hi)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + b * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + c * bn
+    in_bounds = (rows < b_true) & (cols < c_true)
+    sat = (cs == adc_lo) | (cs == adc_hi)  # the failure/detection signal
+
+    # per-spec-slice failure count, lane-accumulated into the resident
+    # (1, n_i) output (the host bills width_i recovery converts each)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n_i), 1)
+    fail_cnt = (sat & in_bounds).astype(jnp.int32).sum()
+    fail_ref[...] += jnp.where(lane == i, fail_cnt, 0)
+
+    # --- recovery pass: the slice re-processed as 1b sub-slices. The
+    # unroll runs to the *max* width; rmult = 0 marks bit positions past
+    # this slice's true width (no value, no accounting).
+    rec = jnp.zeros_like(cs)
+    rsat_cnt = jnp.zeros((), jnp.int32)
+    for t in range(max_w):
+        rm = rmult_ref[0, t]
+        x_b = jax.lax.shift_right_logical(x, li + t) & 1
+        rcs = jax.lax.dot(x_b.astype(jnp.int8), w,
+                          preferred_element_type=jnp.int32)
+        rcs = jnp.clip(rcs, adc_lo, adc_hi)
+        rec += rcs * rm
+        r_sat = (rcs == adc_lo) | (rcs == adc_hi)
+        # recovery saturations only count where recovery actually ran
+        # (speculation failed) and the bit position is real
+        cnt = (r_sat & sat & in_bounds).astype(jnp.int32).sum()
+        rsat_cnt += jnp.where(rm > 0, cnt, 0)
+    rsat_ref[0, 0] += rsat_cnt
+
+    value = jnp.where(sat, rec, cs)       # recovered where failed
+    acc_ref[...] += value * mult_ref[0, 0]  # digital shift+add
+
+    last = (s == n_seg - 1) & (i == n_i - 1) & (j == n_j - 1)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "adc_lo", "adc_hi", "bm", "bn", "rows_per_xbar", "narrow", "interpret"))
+def fused_spec_crossbar(x_u8: jnp.ndarray, w_planes: jnp.ndarray,
+                        spec_li: jnp.ndarray, spec_mask: jnp.ndarray,
+                        mults: jnp.ndarray, rmults: jnp.ndarray,
+                        centers: jnp.ndarray, *,
+                        adc_lo: int = -64, adc_hi: int = 63,
+                        bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                        rows_per_xbar: int = ROWS_PER_XBAR,
+                        narrow: bool = True, interpret: bool = True
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused speculation/recovery forward.
+
+    x_u8:     (B, R) int32 — unsigned 8b input codes (R = true rows).
+    w_planes: (n_j, Rp, C) int8 — signed slice planes, Rp a multiple of
+              ``rows_per_xbar`` >= R (zero row padding is exact).
+    spec_li:  (n_i,) int32 — per spec slice, the low bit index l_i.
+    spec_mask:(n_i,) int32 — per spec slice, (1 << width_i) - 1.
+    mults:    (n_i, n_j) int32 — recombination multipliers; 0 kills a
+              padded weight slice entirely.
+    rmults:   (n_i, max_w) int32 — recovery recombination; row i holds
+              ``1 << t`` for t < width_i, 0 past it.
+    centers:  (n_seg, C) int32 — per-segment Center+Offset phi.
+    narrow:   every spec-slice width < 8 (values fit int8).
+
+    Returns (psum (B, C) int32 including the center term and the
+    recovered-value selects, spec_failures (n_i,) int32 per spec slice,
+    recovery_saturations () int32).
+    """
+    B, R = x_u8.shape
+    n_j, Rp, C = w_planes.shape
+    assert Rp % rows_per_xbar == 0 and Rp >= R, (Rp, R)
+    n_seg = Rp // rows_per_xbar
+    n_i = spec_li.shape[0]
+    max_w = rmults.shape[1]
+    bm = min(bm, _rup(B, 8))
+    bn = min(bn, _rup(C, 128))
+    Bp, Cp = _rup(B, bm), _rup(C, bn)
+    x_p = jnp.pad(x_u8.astype(jnp.int32), ((0, Bp - B), (0, Rp - R)))
+    w_p = jnp.pad(w_planes, ((0, 0), (0, 0), (0, Cp - C)))
+    cen_p = jnp.pad(centers.astype(jnp.int32), ((0, 0), (0, Cp - C)))
+    grid = (Bp // bm, Cp // bn, n_seg, n_i, n_j)
+    psum, fails, rsats = pl.pallas_call(
+        functools.partial(_kernel, n_seg=n_seg, n_i=n_i, n_j=n_j,
+                          max_w=max_w, adc_lo=adc_lo, adc_hi=adc_hi,
+                          bm=bm, bn=bn, b_true=B, c_true=C, narrow=narrow),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, rows_per_xbar), lambda b, c, s, i, j: (b, s)),
+            pl.BlockSpec((1, rows_per_xbar, bn),
+                         lambda b, c, s, i, j: (j, s, c)),
+            pl.BlockSpec((1, 1), lambda b, c, s, i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda b, c, s, i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda b, c, s, i, j: (i, j)),
+            pl.BlockSpec((1, max_w), lambda b, c, s, i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda b, c, s, i, j: (s, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda b, c, s, i, j: (b, c)),
+            pl.BlockSpec((1, n_i), lambda b, c, s, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c, s, i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Cp), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_i), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_p, w_p,
+      spec_li.astype(jnp.int32).reshape(n_i, 1),
+      spec_mask.astype(jnp.int32).reshape(n_i, 1),
+      mults.astype(jnp.int32), rmults.astype(jnp.int32), cen_p)
+    return psum[:B, :C], fails[0], rsats[0, 0]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_crossbar as _fx
+from repro.kernels import fused_spec_crossbar as _fs
 from repro.kernels import int8_matmul as _im
 from repro.kernels import ref as _ref
 from repro.kernels import sliced_crossbar as _sx
@@ -183,6 +184,68 @@ def fused_crossbar_forward(x_u8: jnp.ndarray, planes: jnp.ndarray,
               rows_per_xbar=rows_per_xbar, narrow=narrow)
 
 
+def fused_spec_crossbar_forward(x_u8: jnp.ndarray, planes: jnp.ndarray,
+                                shifts, centers: jnp.ndarray, *,
+                                spec_slicing: tuple[int, ...],
+                                adc_lo: int, adc_hi: int,
+                                valid: jnp.ndarray | None = None,
+                                rows_per_xbar: int = 512,
+                                backend: str | None = None
+                                ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray]:
+    """Fused speculation/recovery forward (paper §4.3 Dynamic Input
+    Slicing): speculative slice-plane matmul + per-segment ADC clamp +
+    failure detection + 1b recovery converts + select + shift-and-
+    accumulate + digital center term, one op.
+
+    x_u8:     (B, R) unsigned 8b input codes (any int dtype).
+    planes:   (n_j, n_seg, rows_per_xbar, C) int8 signed slice planes —
+              the ``EncodedWeights.planes`` layout, possibly padded on
+              the slice axis by the per-site compiler.
+    shifts:   (n_j,) per-slice recombination shifts — a static tuple or
+              a traced int32 array (ragged per-site plans).
+    centers:  (n_seg, C) int32 Center+Offset phi.
+    spec_slicing: the speculative input slicing, e.g. (4, 2, 2).
+    valid:    optional (n_j,) bool mask for padded slice planes; masked
+              planes are zeroed and their multipliers killed, so the
+              psum is identical to running the unpadded encoding (work
+              counters still see every plane — the Python-loop
+              contract).
+
+    Returns (psum (B, C) int32 including the center term,
+    spec_failures (n_i,) int32 — failed conversions per spec slice, the
+    analytic source for recovery-convert billing — and
+    recovery_saturations () int32). Bit-exact vs the
+    ``core.speculation.forward`` Python loop at noise 0 for any ADC
+    window containing 0 (the padding contract).
+    """
+    spec_slicing = tuple(int(b) for b in spec_slicing)
+    bounds = _input_bounds(spec_slicing)
+    n_j, n_seg, rx, C = planes.shape
+    if rx != rows_per_xbar:
+        raise ValueError(f"planes rows {rx} != rows_per_xbar {rows_per_xbar}")
+    if valid is not None:
+        planes = planes * valid[:, None, None, None].astype(planes.dtype)
+    w_flat = planes.reshape(n_j, n_seg * rows_per_xbar, C)
+    spec_li = jnp.asarray([lo for (_, lo) in bounds], jnp.int32)
+    spec_mask = jnp.asarray([(1 << (hi - lo + 1)) - 1 for (hi, lo) in bounds],
+                            jnp.int32)
+    shifts_arr = jnp.asarray(shifts, jnp.int32)
+    mults = jnp.left_shift(jnp.int32(1),
+                           spec_li[:, None] + shifts_arr[None, :])
+    if valid is not None:
+        mults = mults * valid.astype(jnp.int32)[None, :]
+    widths = [hi - lo + 1 for (hi, lo) in bounds]
+    max_w = max(widths)
+    rmults = jnp.asarray([[(1 << t) if t < w else 0 for t in range(max_w)]
+                          for w in widths], jnp.int32)
+    narrow = max_w < 8
+    fn = dispatch("fused_spec_crossbar", backend)
+    return fn(x_u8.astype(jnp.int32), w_flat, spec_li, spec_mask, mults,
+              rmults, centers.astype(jnp.int32), adc_lo=adc_lo, adc_hi=adc_hi,
+              rows_per_xbar=rows_per_xbar, narrow=narrow)
+
+
 # ------------------------------------------------------------- registry
 def _drop_narrow(fn):
     """The XLA reference needs no narrow/int8 hint — accept and drop it."""
@@ -210,3 +273,9 @@ register("fused_crossbar", "interpret",
          functools.partial(_fx.fused_crossbar, interpret=True))
 register("fused_crossbar", "pallas-tpu",
          functools.partial(_fx.fused_crossbar, interpret=False))
+
+register("fused_spec_crossbar", "xla", _drop_narrow(_ref.fused_spec_crossbar))
+register("fused_spec_crossbar", "interpret",
+         functools.partial(_fs.fused_spec_crossbar, interpret=True))
+register("fused_spec_crossbar", "pallas-tpu",
+         functools.partial(_fs.fused_spec_crossbar, interpret=False))

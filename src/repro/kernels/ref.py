@@ -88,3 +88,61 @@ def fused_crossbar(x_u8: jnp.ndarray, w_planes: jnp.ndarray,
             sats = sats + ((cs == adc_lo) | (cs == adc_hi)).sum()
             out = out + cs.sum(axis=1) * mults[i, j]
     return out, sats
+
+
+def fused_spec_crossbar(x_u8: jnp.ndarray, w_planes: jnp.ndarray,
+                        spec_li: jnp.ndarray, spec_mask: jnp.ndarray,
+                        mults: jnp.ndarray, rmults: jnp.ndarray,
+                        centers: jnp.ndarray, *,
+                        rows_per_xbar: int = 512,
+                        adc_lo: int = -64,
+                        adc_hi: int = 63
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pure-XLA reference for ``fused_spec_crossbar.fused_spec_crossbar``.
+
+    Speculation + recovery (paper §4.3): each spec slice i is converted
+    once per weight plane j; conversions that clamp at an ADC bound are
+    *failures* whose value is replaced by the 1b recovery recombination
+    ``sum_t clip(x_bit_t @ w_j) * rmults[i, t]``. Failure counts are per
+    spec slice (the host bills ``width_i`` recovery converts each);
+    recovery saturations count only where recovery actually ran.
+
+    Same contract as the Pallas kernel — see its docstring for the
+    argument shapes. Returns (psum (B, C) int32, spec_failures (n_i,)
+    int32, recovery_saturations () int32).
+    """
+    B, R = x_u8.shape
+    n_j, Rp, C = w_planes.shape
+    n_seg = Rp // rows_per_xbar
+    n_i = spec_li.shape[0]
+    max_w = rmults.shape[1]
+    xs = jnp.pad(x_u8.astype(jnp.int32), ((0, 0), (0, Rp - R)))
+    xs = xs.reshape(B, n_seg, rows_per_xbar)
+    ws = w_planes.reshape(n_j, n_seg, rows_per_xbar, C).astype(jnp.int32)
+    out = jnp.einsum("bsr,sc->bc", xs, centers.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)  # center term
+    fails = []
+    rsats = jnp.zeros((), jnp.int32)
+    for i in range(n_i):
+        x_i = jax.lax.shift_right_logical(xs, spec_li[i]) & spec_mask[i]
+        fail_i = jnp.zeros((), jnp.int32)
+        for j in range(n_j):
+            cs = jnp.einsum("bsr,src->bsc", x_i, ws[j],
+                            preferred_element_type=jnp.int32)
+            cs = jnp.clip(cs, adc_lo, adc_hi)  # per-segment ADC
+            sat = (cs == adc_lo) | (cs == adc_hi)
+            fail_i = fail_i + sat.astype(jnp.int32).sum()
+            rec = jnp.zeros_like(cs)
+            for t in range(max_w):
+                x_b = jax.lax.shift_right_logical(xs, spec_li[i] + t) & 1
+                rcs = jnp.einsum("bsr,src->bsc", x_b, ws[j],
+                                 preferred_element_type=jnp.int32)
+                rcs = jnp.clip(rcs, adc_lo, adc_hi)
+                rec = rec + rcs * rmults[i, t]
+                r_sat = (rcs == adc_lo) | (rcs == adc_hi)
+                cnt = (r_sat & sat).astype(jnp.int32).sum()
+                rsats = rsats + jnp.where(rmults[i, t] > 0, cnt, 0)
+            value = jnp.where(sat, rec, cs)
+            out = out + value.sum(axis=1) * mults[i, j]
+        fails.append(fail_i)
+    return out, jnp.stack(fails), rsats

@@ -12,6 +12,7 @@ experts sharded over the model axis.
 
 from __future__ import annotations
 
+import contextlib
 import math
 
 import jax
@@ -34,6 +35,81 @@ def _dtype(cfg: ArchConfig):
 
 
 # ------------------------------------------------------------------ pim
+# Trace-time work-stats collector (sow-style). ``collect_pim_stats()``
+# pushes a sink; while one is active, every exact-mode ``pim_matmul``
+# records its per-pass SpeculationStats / CrossbarStats into the
+# *innermost* sink at trace time. Tracer hygiene: values created inside
+# a ``lax.scan`` body belong to that sub-trace and must not leak to an
+# outer sink — ``transformer.decode_step`` therefore opens its own sink
+# inside the scanned block body and re-emits the summed totals as scan
+# outputs (see its ``repeat_body``); other scanned/vmapped regions
+# (prefill bodies, MoE expert vmap) *suspend* collection instead, so the
+# collector reports decode-step work (the serve-time converts/token
+# metric) plus any non-scanned projections.
+_PIM_STATS_SINKS: list[list] = []
+
+# total-able work-stat fields; ``conversions_possible`` is the static
+# path's name for the no-speculation baseline
+PIM_STAT_KEYS = ("adc_converts", "no_spec_converts", "spec_failures",
+                 "spec_attempts", "recovery_saturations", "cycles", "macs")
+_STAT_ALIASES = {"no_spec_converts": "conversions_possible"}
+
+
+@contextlib.contextmanager
+def collect_pim_stats():
+    """Collect exact-path work stats from every ``pim_matmul`` traced in
+    the body. Yields the sink list: raw stats objects and/or totals
+    dicts (from scanned regions). Reduce with ``pim_stats_totals``."""
+    sink: list = []
+    _PIM_STATS_SINKS.append(sink)
+    try:
+        yield sink
+    finally:
+        _PIM_STATS_SINKS.remove(sink)
+
+
+@contextlib.contextmanager
+def suspend_pim_stats():
+    """Mask all active sinks (scan/vmap bodies whose tracers must not
+    escape into them)."""
+    saved = _PIM_STATS_SINKS[:]
+    _PIM_STATS_SINKS.clear()
+    try:
+        yield
+    finally:
+        _PIM_STATS_SINKS.extend(saved)
+
+
+def pim_stats_active() -> bool:
+    return bool(_PIM_STATS_SINKS)
+
+
+def pim_stats_record(entry) -> None:
+    """Append a stats object / totals dict to the innermost active sink."""
+    if _PIM_STATS_SINKS:
+        _PIM_STATS_SINKS[-1].append(entry)
+
+
+def pim_stats_totals(stats) -> dict:
+    """Sum a sink's entries into one ``{field: total}`` dict.
+
+    Entries are SpeculationStats / CrossbarStats objects (exact-path
+    per-pass stats) or dicts (pre-summed scan totals). Static fields
+    stay exact Python ints; traced fields sum as arrays.
+    """
+    tot = dict.fromkeys(PIM_STAT_KEYS, 0)
+    for st in stats:
+        for k in PIM_STAT_KEYS:
+            if isinstance(st, dict):
+                v = st.get(k, 0)
+            else:
+                v = getattr(st, k, None)
+                if v is None:
+                    v = getattr(st, _STAT_ALIASES.get(k, k), 0)
+            tot[k] = tot[k] + v
+    return tot
+
+
 class PimTap:
     """Calibration recorder: stands in for a plan leaf during the capture
     forward of ``repro.models.pim.prepare_pim_params``. ``pim_matmul``
@@ -113,7 +189,12 @@ def pim_matmul(x: jnp.ndarray, w: jnp.ndarray, plan,
     if cfg.pim_mode == "fast":
         y = pim_linear.forward_fast(xb, pp, use_pallas=cfg.pim_use_pallas)
     elif cfg.pim_mode == "exact":
-        y = pim_linear.forward_exact(xb, pp)
+        if pim_stats_active():
+            y, st = pim_linear.forward_exact(xb, pp, return_stats=True)
+            for s in st:
+                pim_stats_record(s)
+        else:
+            y = pim_linear.forward_exact(xb, pp)
     elif cfg.pim_mode == "int8":
         y = pim_linear.forward_int_reference(xb, pp)
     else:
@@ -369,8 +450,12 @@ def _expert_matmul(x5: jnp.ndarray, w3: jnp.ndarray, plan,
     if plan is None or cfg.pim_mode == "off":
         return jnp.einsum(spec, x5, w3)
     xt = jnp.moveaxis(x5, 2, 0)  # (E, B, nG, cap, d_in)
-    yt = jax.vmap(lambda xe, we, pe: pim_matmul(xe, we, pe, cfg))(
-        xt, w3, plan)
+    # stats stay suspended under the expert vmap: batched tracers must
+    # not leak into an outer sink (converts/token reporting covers dense
+    # projections; per-expert billing is a ROADMAP follow-on)
+    with suspend_pim_stats():
+        yt = jax.vmap(lambda xe, we, pe: pim_matmul(xe, we, pe, cfg))(
+            xt, w3, plan)
     return jnp.moveaxis(yt, 0, 2)
 
 

@@ -18,6 +18,7 @@ Public surface:
 
 from __future__ import annotations
 
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -159,8 +160,9 @@ def forward_hidden(params: dict, cfg: ArchConfig, inputs: jnp.ndarray,
         return h, None
 
     body = jax.checkpoint(repeat_body) if cfg.remat else repeat_body
-    x, _ = jax.lax.scan(body, x,
-                        (tuple(params["blocks"]), _plan_blocks(cfg, plans)))
+    with L.suspend_pim_stats():  # tracer hygiene — see _run_prefill_body
+        x, _ = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), _plan_blocks(cfg, plans)))
     return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
 
 
@@ -397,20 +399,38 @@ def decode_step(params: dict, cfg: ArchConfig, state: dict,
     """
     x = embed_inputs(params, cfg, tokens)
     pos = state["pos"]
+    # sow-style work-stats collection (see layers.collect_pim_stats):
+    # stats tracers born inside the scanned block body belong to the
+    # scan sub-trace, so the body opens its OWN sink and re-emits the
+    # summed totals as scan outputs; the per-repeat stacks are reduced
+    # below and recorded into the caller's sink as outer-trace values.
+    collect = L.pim_stats_active()
 
     def repeat_body(carry, xs):
         h = carry
         rep_params, rep_caches, rep_plans = xs
         new_caches = []
-        for i, kind in enumerate(cfg.block_pattern):
-            c, h = _decode_block(kind, i, rep_params[i], cfg, rep_caches[i],
-                                 h, pos, plan=rep_plans[i])
-            new_caches.append(c)
+        ctx = L.collect_pim_stats() if collect else contextlib.nullcontext([])
+        with ctx as inner:
+            for i, kind in enumerate(cfg.block_pattern):
+                c, h = _decode_block(kind, i, rep_params[i], cfg,
+                                     rep_caches[i], h, pos,
+                                     plan=rep_plans[i])
+                new_caches.append(c)
+        if collect:
+            totals = {k: jnp.asarray(v)
+                      for k, v in L.pim_stats_totals(inner).items()}
+            return h, (tuple(new_caches), totals)
         return h, tuple(new_caches)
 
-    x, new_caches = jax.lax.scan(
+    x, ys = jax.lax.scan(
         repeat_body, x, (tuple(params["blocks"]), tuple(state["caches"]),
                          _plan_blocks(cfg, plans)))
+    if collect:
+        new_caches, rep_totals = ys
+        L.pim_stats_record({k: v.sum(axis=0) for k, v in rep_totals.items()})
+    else:
+        new_caches = ys
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.lm_head(params["embed"], cfg, x,
                        plan=_subplan(_subplan(plans, "embed"), "head"))
@@ -558,9 +578,14 @@ def _prefill_repeat_body(cfg: ArchConfig, B: int, C: int,
 def _run_prefill_body(params: dict, cfg: ArchConfig, x: jnp.ndarray,
                       caches, body, plans=None) -> tuple[jnp.ndarray, list]:
     body = jax.checkpoint(body) if cfg.remat else body
-    x, new_caches = jax.lax.scan(
-        body, x, (tuple(params["blocks"]), tuple(caches),
-                  _plan_blocks(cfg, plans)))
+    # work-stats collection is decode-focused: suspend sinks while the
+    # scan traces its body so block-internal stats tracers cannot leak
+    # (the converts/token metric bills decode steps; lm_head below still
+    # records — it sits outside the scan)
+    with L.suspend_pim_stats():
+        x, new_caches = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(caches),
+                      _plan_blocks(cfg, plans)))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.lm_head(params["embed"], cfg, x[:, -1:],
                        plan=_subplan(_subplan(plans, "embed"), "head"))

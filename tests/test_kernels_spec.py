@@ -1,0 +1,447 @@
+"""Differential harness for the fused speculation/recovery kernel.
+
+``repro.kernels.fused_spec_crossbar`` runs the whole Dynamic Input
+Slicing pass (paper §4.3) in one launch: spec-slice cropping, slice-plane
+matmuls, per-segment signed ADC clamp, saturation-as-failure detection,
+in-kernel 1b recovery converts, select, shift+add, center term. These
+tests lock it to three independent ground truths:
+
+  1. the ``core.speculation.forward`` Python loop (``backend='python'``)
+     — the datapath the paper's convert-economy numbers come from;
+  2. the pure-jnp oracle ``kernels.ref.fused_spec_crossbar`` (the
+     registry's XLA backend);
+  3. a standalone numpy loop written here (so a shared bug in the kernel
+     *and* ``ref`` cannot hide).
+
+Sweeps cover random spec x weight slicings, ADC bits 4..8, ragged
+``valid`` masks from adaptive per-site plans, both interpret and XLA
+backends, jit, and end-to-end greedy decode — everything bit-exact,
+including every ``SpeculationStats`` work counter. The satellite fixes
+(int32-overflowing counters, the silent-noiseless hazard, the negative-
+pad shape mismatch) get their regression tests here too.
+"""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc as adc_lib
+from repro.core import center_offset as co
+from repro.core import crossbar as xbar
+from repro.core import slicing as sl
+from repro.core import speculation as spec
+from repro.kernels import ops
+
+BACKENDS = ("interpret", "xla")
+
+STAT_FIELDS = ("adc_converts", "no_spec_converts", "spec_failures",
+               "spec_attempts", "recovery_saturations", "cycles", "macs")
+
+
+def _mk_layer(rng, rows, cols, B, weight_slicing, mode="center"):
+    w_u = rng.integers(0, 256, (rows, cols)).astype(np.int64)
+    enc = co.encode(w_u, weight_slicing, mode=mode)
+    x = jnp.asarray(rng.integers(0, 256, (B, rows)))
+    return w_u, enc, x
+
+
+def _stat_ints(s: spec.SpeculationStats) -> tuple[int, ...]:
+    return tuple(int(getattr(s, f)) for f in STAT_FIELDS)
+
+
+def _np_spec(x, planes, shifts, centers, spec_slicing, lo, hi):
+    """Independent numpy oracle: the full speculate/recover datapath as
+    plain loops (psum, failures, recovery converts, recovery sats)."""
+    x = np.asarray(x, np.int64)
+    planes = np.asarray(planes, np.int64)  # (n_j, n_seg, R, C)
+    centers = np.asarray(centers, np.int64)
+    n_j, n_seg, R, C = planes.shape
+    B = x.shape[0]
+    xp = np.zeros((B, n_seg * R), np.int64)
+    xp[:, :x.shape[1]] = x
+    xs = xp.reshape(B, n_seg, R)
+    psum = np.einsum("bsr,sc->bc", xs, centers)
+    failures = rec_converts = rec_sats = 0
+    for (hi_b, li) in sl.slice_bounds(spec_slicing, sl.INPUT_BITS):
+        width = hi_b - li + 1
+        x_i = (xs >> li) & ((1 << width) - 1)
+        for j in range(n_j):
+            cs = np.einsum("bsr,src->bsc", x_i, planes[j])
+            sv = np.clip(cs, lo, hi)
+            ssat = (sv == lo) | (sv == hi)
+            rec = np.zeros_like(sv)
+            for b in range(width):
+                xb = (xs >> (li + b)) & 1
+                rcs = np.einsum("bsr,src->bsc", xb, planes[j])
+                rv = np.clip(rcs, lo, hi)
+                rsat = (rv == lo) | (rv == hi)
+                rec = rec + (rv << b)
+                rec_sats += int((rsat & ssat).sum())
+            value = np.where(ssat, rec, sv)
+            psum = psum + value.sum(axis=1) * (1 << (li + int(shifts[j])))
+            failures += int(ssat.sum())
+            rec_converts += width * int(ssat.sum())
+    return psum, failures, rec_converts, rec_sats
+
+
+class TestSpecDifferential:
+    """Hypothesis sweep: random shapes x random spec/weight slicings x
+    ADC bits 4..8, fused (both backends) vs the Python loop and the
+    numpy oracle — psum and every stats field bit-identical."""
+
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1), st.integers(4, 8))
+    @hypothesis.settings(max_examples=6, deadline=None)
+    def test_vs_python_loop_and_numpy(self, seed, adc_bits):
+        rng = np.random.default_rng(seed)
+        all_slicings = sl.enumerate_slicings()
+        w_slicing = all_slicings[int(rng.integers(0, len(all_slicings)))]
+        spec_slicing = all_slicings[int(rng.integers(0, len(all_slicings)))]
+        rows = int(rng.integers(1, 650))
+        cols = int(rng.integers(1, 12))
+        B = int(rng.integers(1, 4))
+        _, enc, x = _mk_layer(rng, rows, cols, B, w_slicing)
+        adc = adc_lib.ADCConfig(bits=adc_bits, signed=True)
+
+        want, st_py = spec.forward(x, enc, spec_slicing, adc,
+                                   backend="python")
+        np_psum, np_fail, np_rconv, np_rsat = _np_spec(
+            x, enc.planes, enc.shifts, enc.centers, spec_slicing,
+            adc.lo, adc.hi)
+        np.testing.assert_array_equal(np.asarray(want, np.int64), np_psum)
+        assert int(st_py.spec_failures) == np_fail
+        assert int(st_py.adc_converts) == st_py.spec_attempts + np_rconv
+        assert int(st_py.recovery_saturations) == np_rsat
+        for backend in BACKENDS:
+            got, st_f = spec.forward(x, enc, spec_slicing, adc,
+                                     backend=backend)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            assert _stat_ints(st_f) == _stat_ints(st_py)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("rows,cols,B,w_slicing,spec_slicing", [
+        (1, 1, 1, (4, 4), (8,)),             # minimal + non-narrow spec
+        (513, 3, 1, (4, 2, 2), (4, 2, 2)),   # ragged second segment
+        (512, 130, 2, (1,) * 8, (4, 4)),     # C off the 128 tile, max n_j
+        (300, 7, 1, (2, 2, 2, 2), (2, 2, 2, 2)),  # everything off-tile
+    ])
+    def test_edge_shapes(self, rows, cols, B, w_slicing, spec_slicing,
+                         backend):
+        rng = np.random.default_rng(rows * 31 + cols * 7 + B)
+        _, enc, x = _mk_layer(rng, rows, cols, B, w_slicing)
+        want, st_py = spec.forward(x, enc, spec_slicing, backend="python")
+        got, st_f = spec.forward(x, enc, spec_slicing, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert _stat_ints(st_f) == _stat_ints(st_py)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_unsigned_adc_zero_on_lo_bound(self, backend):
+        """ISAAC-style unsigned window: 0 sits on the lo bound, so even
+        all-zero column sums count as saturated/failed — both paths must
+        agree on that (including zero recovery sums re-saturating)."""
+        rng = np.random.default_rng(9)
+        w_u = rng.integers(0, 256, (256, 8)).astype(np.int64)
+        enc = co.encode(w_u, (4, 4), mode="unsigned")
+        x = jnp.asarray(rng.integers(0, 256, (3, 256)))
+        want, st_py = spec.forward(x, enc, (4, 2, 2), adc_lib.ISAAC_ADC,
+                                   backend="python")
+        got, st_f = spec.forward(x, enc, (4, 2, 2), adc_lib.ISAAC_ADC,
+                                 backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert _stat_ints(st_f) == _stat_ints(st_py)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_saturations_actually_exercised(self, backend):
+        """The differential is vacuous if nothing ever fails: wide
+        weights + a narrow ADC must produce failures AND recovery
+        saturations, and the kernel must still match the loop."""
+        rng = np.random.default_rng(13)
+        w_u = np.clip(rng.normal(128, 70, (500, 10)), 0, 255).astype(np.int64)
+        enc = co.encode(w_u, (4, 2, 2))
+        x = jnp.asarray(rng.integers(0, 256, (3, 500)))
+        adc = adc_lib.ADCConfig(bits=5, signed=True)
+        want, st_py = spec.forward(x, enc, (4, 2, 2), adc, backend="python")
+        got, st_f = spec.forward(x, enc, (4, 2, 2), adc, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert _stat_ints(st_f) == _stat_ints(st_py)
+        assert int(st_f.spec_failures) > 0
+        assert int(st_f.recovery_saturations) > 0
+        assert int(st_f.adc_converts) > st_f.spec_attempts
+
+
+class TestRaggedValid:
+    """Adaptive per-site plans pad the weight-slice axis: padded planes
+    (zeroed + ``valid`` mask + garbage padded shifts) must be inert on
+    every backend — same psum, same failure/saturation counts."""
+
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1))
+    @hypothesis.settings(max_examples=4, deadline=None)
+    def test_padded_planes_inert(self, seed):
+        rng = np.random.default_rng(seed)
+        all_slicings = sl.enumerate_slicings()
+        w_slicing = all_slicings[int(rng.integers(0, len(all_slicings)))]
+        rows = int(rng.integers(1, 500))
+        cols = int(rng.integers(1, 10))
+        _, enc, x = _mk_layer(rng, rows, cols, 2, w_slicing)
+        n_s = enc.n_slices
+        n_pad = int(rng.integers(1, 4))
+        padded_planes = jnp.pad(jnp.asarray(enc.planes),
+                                ((0, n_pad), (0, 0), (0, 0), (0, 0)))
+        pad_shifts = rng.integers(0, 8, n_pad)
+        shifts = jnp.asarray(list(enc.shifts) + list(pad_shifts), jnp.int32)
+        valid = jnp.asarray([True] * n_s + [False] * n_pad)
+
+        want, wf, wr = ops.fused_spec_crossbar_forward(
+            x, jnp.asarray(enc.planes), jnp.asarray(enc.shifts, jnp.int32),
+            jnp.asarray(enc.centers), spec_slicing=(4, 2, 2),
+            adc_lo=-64, adc_hi=63, backend="xla")
+        for backend in BACKENDS:
+            got, gf, gr = ops.fused_spec_crossbar_forward(
+                x, padded_planes, shifts, jnp.asarray(enc.centers),
+                spec_slicing=(4, 2, 2), adc_lo=-64, adc_hi=63,
+                valid=valid, backend=backend)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+            assert int(gr) == int(wr)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_speculation_forward_valid(self, backend):
+        """``spec.forward(valid=...)`` on a padded encoding: fused and
+        Python paths agree on psum AND every stats field, and the psum
+        equals the unpadded encoding's."""
+        rng = np.random.default_rng(23)
+        _, enc, x = _mk_layer(rng, 300, 6, 2, (4, 2, 2))
+        padded = dataclasses.replace(
+            enc,
+            planes=np.pad(enc.planes, ((0, 2), (0, 0), (0, 0), (0, 0))),
+            shifts=jnp.asarray(list(enc.shifts) + [5, 3], jnp.int32),
+            slicing=None)
+        valid = jnp.asarray([True] * enc.n_slices + [False, False])
+        want, _ = spec.forward(x, enc, backend="python")
+        got_py, st_py = spec.forward(x, padded, valid=valid,
+                                     backend="python")
+        got_f, st_f = spec.forward(x, padded, valid=valid, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got_py), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want))
+        assert _stat_ints(st_f) == _stat_ints(st_py)
+
+
+class TestUnderJit:
+    """The fused op must trace cleanly inside jit (the models call it
+    from scanned/jitted decode steps) with bit-identical results."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_spec_forward_under_jit(self, backend):
+        rng = np.random.default_rng(33)
+        _, enc, x = _mk_layer(rng, 200, 8, 2, (4, 2, 2))
+
+        def f(xi):
+            psum, s = spec.forward(xi, enc, backend=backend)
+            return (psum, s.adc_converts, s.spec_failures,
+                    s.recovery_saturations)
+
+        eager = f(x)
+        jitted = jax.jit(f)(x)
+        for e, j in zip(eager, jitted):
+            np.testing.assert_array_equal(np.asarray(e), np.asarray(j))
+
+    def test_registered_backends(self):
+        assert set(ops.backends("fused_spec_crossbar")) == \
+            {"xla", "interpret", "pallas-tpu"}
+
+
+class TestWorkCounterScale:
+    """Satellite: production batch x column x slice products overflow
+    int32 (the historical counter dtype). Shape-static counters are now
+    exact Python ints at any scale; data-dependent accumulators use
+    ``crossbar.work_dtype()`` (int64 under ``jax_enable_x64``)."""
+
+    def test_work_dtype_tracks_x64(self):
+        assert xbar.work_dtype() == jnp.int32  # suite default: no x64
+        try:
+            jax.config.update("jax_enable_x64", True)
+            assert xbar.work_dtype() == jnp.int64
+        finally:
+            jax.config.update("jax_enable_x64", False)
+
+    def test_crossbar_counters_beyond_int32(self):
+        """eval_shape traces the fused crossbar path at a batch size
+        whose convert count exceeds 2^31 — the counters must come back
+        as exact (un-wrapped) Python ints."""
+        rng = np.random.default_rng(5)
+        _, enc, _ = _mk_layer(rng, 128, 8, 1, (4, 2, 2))
+        B = 1 << 25  # B * n_seg * cols * 8 slices * 3 planes = 6.4e9
+        box = {}
+
+        def f(xi):
+            psum, s = xbar.forward(xi, enc, (1,) * 8, backend="xla")
+            box["st"] = s
+            return psum
+
+        jax.eval_shape(f, jax.ShapeDtypeStruct((B, 128), jnp.int32))
+        s = box["st"]
+        expect = B * 1 * 8 * 8 * 3
+        assert expect > 2 ** 31
+        assert type(s.adc_converts) is int and s.adc_converts == expect
+        assert type(s.conversions_possible) is int
+        assert s.conversions_possible == expect
+        assert type(s.macs) is int and s.macs == B * 128 * 8
+
+    def test_speculation_counters_beyond_int32(self):
+        """Same at the speculation layer: the static counters survive
+        any scale, and with x64 on, the data-dependent ones (converts,
+        failures, recovery sats) accumulate in int64."""
+        rng = np.random.default_rng(6)
+        _, enc, _ = _mk_layer(rng, 128, 8, 1, (4, 2, 2))
+        B = 1 << 25
+        box = {}
+
+        def f(xi):
+            psum, s = spec.forward(xi, enc, (4, 2, 2), backend="python")
+            box["st"] = s
+            return psum
+
+        try:
+            jax.config.update("jax_enable_x64", True)
+            jax.eval_shape(f, jax.ShapeDtypeStruct((B, 128), jnp.int32))
+        finally:
+            jax.config.update("jax_enable_x64", False)
+        s = box["st"]
+        assert type(s.spec_attempts) is int and s.spec_attempts > 2 ** 31
+        assert type(s.no_spec_converts) is int
+        assert s.no_spec_converts == B * 8 * 8 * 3
+        assert type(s.macs) is int and s.macs == B * 128 * 8
+        assert s.adc_converts.dtype == jnp.int64
+        assert s.spec_failures.dtype == jnp.int64
+        assert s.recovery_saturations.dtype == jnp.int64
+
+    def test_small_scale_counts_still_exact(self):
+        """The promotion changed dtypes, not values: pinned-shape counts
+        match the closed-form arithmetic."""
+        rng = np.random.default_rng(7)
+        _, enc, x = _mk_layer(rng, 96, 6, 3, (4, 2, 2))
+        _, s = spec.forward(x, enc, (4, 2, 2), backend="python")
+        assert s.spec_attempts == 3 * 1 * 6 * 3 * 3
+        assert s.no_spec_converts == 3 * 1 * 6 * 8 * 3
+        assert s.cycles == 3 + 8
+        assert s.macs == 3 * 96 * 6
+        assert int(s.adc_converts) >= s.spec_attempts
+
+
+class TestNoiseGuard:
+    """Satellite: requesting noise without a key used to silently run
+    noiseless — now it refuses loudly in both entry points."""
+
+    def test_crossbar_raises_without_key(self):
+        rng = np.random.default_rng(11)
+        _, enc, x = _mk_layer(rng, 64, 4, 2, (4, 4))
+        with pytest.raises(ValueError, match="requires a PRNG key"):
+            xbar.forward(x, enc, (4, 4), noise_level=0.05)
+
+    def test_speculation_raises_without_key(self):
+        rng = np.random.default_rng(11)
+        _, enc, x = _mk_layer(rng, 64, 4, 2, (4, 4))
+        with pytest.raises(ValueError, match="requires a PRNG key"):
+            spec.forward(x, enc, noise_level=0.05)
+
+    def test_noise_with_key_runs_the_loop(self):
+        """The noisy path still works (it takes the Python loop — the
+        per-conversion noise model is stateful) and actually perturbs."""
+        rng = np.random.default_rng(12)
+        _, enc, x = _mk_layer(rng, 256, 6, 2, (4, 2, 2))
+        clean, _ = spec.forward(x, enc, backend="python")
+        noisy, s = spec.forward(x, enc, noise_level=0.3,
+                                key=jax.random.key(0))
+        assert noisy.shape == clean.shape
+        assert int(jnp.abs(noisy - clean).max()) > 0
+        assert s.cycles == 11
+
+    def test_noise_zero_with_key_is_noiseless(self):
+        rng = np.random.default_rng(12)
+        _, enc, x = _mk_layer(rng, 128, 4, 2, (4, 4))
+        a, _ = spec.forward(x, enc, backend="python")
+        b, _ = spec.forward(x, enc, noise_level=0.0, key=jax.random.key(1))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestShapeMismatch:
+    """Satellite: a negative pad (inputs wider than the encoding's
+    crossbar capacity) used to crash deep inside ``jnp.pad`` — now it
+    names the mismatch."""
+
+    def test_segment_inputs_negative_pad(self):
+        with pytest.raises(ValueError, match="exceed the crossbar capacity"):
+            xbar._segment_inputs(jnp.zeros((2, 600), jnp.int32), 1, 512)
+
+    def test_forward_with_mismatched_encoding(self):
+        rng = np.random.default_rng(15)
+        _, enc, _ = _mk_layer(rng, 300, 4, 2, (4, 4))  # capacity 512
+        x_wide = jnp.asarray(rng.integers(0, 256, (2, 700)))
+        with pytest.raises(ValueError, match="exceed the crossbar capacity"):
+            xbar.forward(x_wide, enc, (4, 4), backend="python")
+        with pytest.raises(ValueError, match="exceed the crossbar capacity"):
+            spec.forward(x_wide, enc, backend="python")
+
+
+class TestEndToEndDecode:
+    """The wired dispatch: exact-mode + speculation greedy decode is
+    bit-identical between the fused kernel backends and the Python loop,
+    through the jitted decode step, with identical collected work
+    totals — the contract ``benchmarks/serve_pim.py --speculation``
+    reports against."""
+
+    STEPS = 3
+    _cache: dict = {}
+
+    def _decode_trace(self, backend):
+        if backend in self._cache:
+            return self._cache[backend]
+        from repro import configs
+        from repro.models import layers as L
+        from repro.models import pim
+        from repro.models import transformer as T
+        cfg = dataclasses.replace(
+            configs.get("yi-6b").reduced(), pim_mode="exact",
+            pim_speculation=True, pim_kernel_backend=backend)
+        params, _ = T.init_params(cfg, jax.random.key(0))
+        prompts = np.asarray(jax.random.randint(
+            jax.random.key(1), (2, 4), 0, cfg.vocab_size))
+        plans, _ = pim.prepare_pim_params(params, cfg, prompts)
+
+        def step(p, pl, state, tok):
+            with L.collect_pim_stats() as acc:
+                logits, st2 = T.decode_step(p, cfg, state, tok, plans=pl)
+                totals = L.pim_stats_totals(acc)
+            return logits, st2, totals
+
+        step_j = jax.jit(step)
+        logits, state = T.prefill(params, cfg, jnp.asarray(prompts),
+                                  max_len=4 + self.STEPS + 1, plans=plans)
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None]
+        toks, logit_trace = [np.asarray(tok)], []
+        totals = dict.fromkeys(L.PIM_STAT_KEYS, 0)
+        for _ in range(self.STEPS):
+            logits, state, tot = step_j(params, plans, state, tok)
+            tok = jnp.argmax(logits[:, -1, :], -1)[:, None]
+            toks.append(np.asarray(tok))
+            logit_trace.append(np.asarray(logits))
+            for k in totals:
+                totals[k] += int(tot[k])
+        self._cache[backend] = (np.concatenate(toks, 1), logit_trace,
+                                totals)
+        return self._cache[backend]
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_greedy_bit_identity_vs_python(self, backend):
+        ref_toks, ref_logits, ref_totals = self._decode_trace("python")
+        toks, logits, totals = self._decode_trace(backend)
+        np.testing.assert_array_equal(toks, ref_toks)
+        for a, b in zip(logits, ref_logits):
+            np.testing.assert_array_equal(a, b)
+        assert totals == ref_totals
+        assert totals["adc_converts"] >= totals["spec_attempts"] > 0
+        assert totals["adc_converts"] < totals["no_spec_converts"]
