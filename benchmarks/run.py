@@ -115,6 +115,16 @@ REGISTRY: dict[str, Entry] = {
                   f"({o['util_ratio']:.2f}x, floor 1.5x), bit-identical="
                   f"{o['bit_identical']}",
         smoke_kwargs=dict(n_groups=1)),
+    "serve_paged": Entry(
+        "serve_paged",
+        lambda o: f"admitted mean {o['contiguous_mean_admitted']} -> "
+                  f"{o['paged_mean_admitted']} "
+                  f"({o['admission_ratio']}x on {o['budget_tokens']} KV "
+                  f"tokens), peak {o['contiguous_peak_admitted']} -> "
+                  f"{o['paged_peak_admitted']}, "
+                  f"prefix hits {o['paged_prefix_block_hits']}, "
+                  f"bit-identical={o['bit_identical']}",
+        smoke_kwargs=dict(n_requests=4, disaggregated=False)),
     "compile_report": Entry(
         "compile_report",
         lambda o: f"{o['n_sites']} sites, slices {o['slice_histogram']}, "

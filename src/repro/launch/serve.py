@@ -5,7 +5,10 @@
 
 ``--engine continuous`` (default) drives the slot-based scheduler on a
 mixed-length request trace and reports decode-step utilization next to
-throughput; ``--engine lockstep`` runs the fixed-batch reference engine.
+throughput; ``--engine lockstep`` runs the fixed-batch reference engine;
+``--engine paged`` serves the trace from a paged KV block pool
+(``--block-size``/``--blocks``, see ``repro.serve.PagedServeEngine``)
+and reports pool occupancy, prefix-sharing hits, and evictions.
 ``--pim fast`` compiles the params with the per-site architecture
 compiler (``repro.models.pim_compile``, on a random calibration batch)
 and routes every weight-static projection through the centered int8 path
@@ -34,7 +37,12 @@ import numpy as np
 from repro import configs
 from repro.models import pim
 from repro.models import transformer as T
-from repro.serve import ContinuousServeEngine, Request, ServeEngine
+from repro.serve import (
+    ContinuousServeEngine,
+    PagedServeEngine,
+    Request,
+    ServeEngine,
+)
 
 
 def build_trace(n: int, *, prompt_len: int, steps: int, vocab: int,
@@ -57,13 +65,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--engine", choices=("continuous", "lockstep"),
+    ap.add_argument("--engine", choices=("continuous", "lockstep", "paged"),
                     default="continuous")
     ap.add_argument("--requests", type=int, default=8,
                     help="trace length (continuous) / batch size (lockstep)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: KV tokens per pool block")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="paged engine: pool size in blocks (default "
+                         "slots * max_len/block_size — no memory pressure; "
+                         "smaller values exercise queue-until-blocks-free "
+                         "and eviction-by-recompute)")
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--pim", choices=("off", "fast", "exact", "int8"),
@@ -155,20 +170,33 @@ def main() -> None:
                         steps=args.steps, vocab=cfg.vocab_size)
     for i, r in enumerate(trace):
         trace[i] = dataclasses.replace(r, temperature=args.temperature)
-    eng = ContinuousServeEngine(cfg, params, n_slots=args.slots,
-                                max_len=max_len,
-                                prefill_chunk=args.prefill_chunk,
-                                plans=plans)
+    if args.engine == "paged":
+        max_len = -(-max_len // args.block_size) * args.block_size
+        eng = PagedServeEngine(cfg, params, n_slots=args.slots,
+                               max_len=max_len,
+                               prefill_chunk=args.prefill_chunk,
+                               block_size=args.block_size,
+                               n_blocks=args.blocks, plans=plans)
+    else:
+        eng = ContinuousServeEngine(cfg, params, n_slots=args.slots,
+                                    max_len=max_len,
+                                    prefill_chunk=args.prefill_chunk,
+                                    plans=plans)
     t0 = time.monotonic()
     outs = eng.run(trace)
     dt = time.monotonic() - t0
     total = sum(len(o.tokens) for o in outs)
     st = eng.stats
-    print(f"{cfg.name} continuous: {len(outs)} requests, {total} tokens in "
+    print(f"{cfg.name} {args.engine}: {len(outs)} requests, {total} tokens in "
           f"{dt:.2f}s ({total / dt:.1f} tok/s)")
     print(f"decode utilization {st.decode_utilization:.2f} tokens/step over "
           f"{args.slots} slots ({st.decode_steps} decode steps, "
           f"{st.prefill_chunks} prefill chunks)")
+    if args.engine == "paged":
+        print(f"block pool: peak {st.peak_blocks_in_use}/"
+              f"{eng.alloc.n_blocks} blocks of {args.block_size}, "
+              f"{st.prefix_block_hits} prefix hits, {st.evictions} "
+              f"evictions, {st.admission_waits} admission waits")
     print("first outputs:", {o.uid: o.tokens[:8].tolist() for o in outs[:2]})
 
 

@@ -14,11 +14,19 @@ Public surface:
   prefill(params, cfg, tokens)     -> (logits, state)
   decode_step(params, cfg, state, tok) -> (logits, state)
   lm_loss(params, cfg, batch)      -> scalar
+
+Paged KV (vLLM-style block tables — see ``repro.serve.paged``):
+  PagedLayout(n_blocks, block_size)             pool geometry
+  init_decode_state(..., paged=layout)          block-pool attn caches
+  decode_step(..., block_tables=, paged=)       gather/write via tables
+  prefill_chunk_paged(...)                      in-pool chunked prefill
+  insert_request_paged(...)                     contiguous -> blocks scatter
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -229,33 +237,64 @@ def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
 
 
 # ------------------------------------------------------------------ decode
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Geometry of a paged KV pool (vLLM-style block tables).
+
+    Attention caches become one pool of ``n_blocks`` fixed-size blocks
+    shared by every slot, plus one *scratch* row at index ``n_blocks``
+    (the ``sentinel``). A slot's block table maps block index ->
+    pool row; table entries equal to the sentinel land writes in scratch
+    and gather garbage that the attention ``kv_len`` mask then zeroes
+    exactly, so idle or mid-prefill slots stay no-ops without any
+    conditional in the jitted step. Recurrent (mamba/rwkv) carries are
+    per-slot, not paged — they have no sequence axis to page.
+    """
+    n_blocks: int
+    block_size: int
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_blocks
+
+    @property
+    def pool_rows(self) -> int:
+        return self.n_blocks + 1
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
-                      per_slot_pos: bool = False) -> dict:
+                      per_slot_pos: bool = False,
+                      paged: PagedLayout | None = None) -> dict:
     """Stacked per-repeat caches for every pattern position.
 
     With ``per_slot_pos`` the state carries one position per batch slot
     (shape ``(batch,)``) instead of a single scalar, so each slot can sit
     at a different sequence offset — the substrate for continuous
     batching (see ``repro.serve.scheduler``).
+
+    With ``paged`` the attention caches are block pools
+    ``(n_repeats, n_blocks + 1, block_size, kv_heads, head_dim)`` instead
+    of per-slot ``(batch, max_len)`` regions; ``decode_step`` then needs
+    per-slot ``block_tables`` to address them. Recurrent carries keep
+    their per-slot ``batch`` axis either way.
     """
     hd = cfg.resolved_head_dim
     kv_dt = jnp.dtype(cfg.kv_cache_dtype)
     caches = []
     for kind in cfg.block_pattern:
         if kind == "attn":
-            c = {
-                "k": jnp.zeros((cfg.n_repeats, batch, max_len, cfg.n_kv_heads,
-                                hd), kv_dt),
-                "v": jnp.zeros((cfg.n_repeats, batch, max_len, cfg.n_kv_heads,
-                                hd), kv_dt),
-            }
+            if paged is not None:
+                shape = (cfg.n_repeats, paged.pool_rows, paged.block_size,
+                         cfg.n_kv_heads, hd)
+            else:
+                shape = (cfg.n_repeats, batch, max_len, cfg.n_kv_heads, hd)
+            c = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
             if kv_dt == jnp.int8:
-                c["k_scale"] = jnp.zeros(
-                    (cfg.n_repeats, batch, max_len, cfg.n_kv_heads),
-                    jnp.float32)
-                c["v_scale"] = jnp.zeros(
-                    (cfg.n_repeats, batch, max_len, cfg.n_kv_heads),
-                    jnp.float32)
+                c["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+                c["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
         elif kind == "mamba":
             one = S.init_mamba_state(cfg, batch)
             c = jax.tree.map(
@@ -271,16 +310,25 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
     return {"caches": caches, "pos": pos}
 
 
-def cache_specs(cfg: ArchConfig) -> dict:
-    """Logical shardings for the decode state (KV cache seq-sharded)."""
+def cache_specs(cfg: ArchConfig, *, paged: bool = False) -> dict:
+    """Logical shardings for the decode state (KV cache seq-sharded).
+
+    Paged pools shard their *block* axis on ``cache_batch`` (blocks play
+    the role per-slot regions play contiguously: under
+    ``MULTIPOD_SERVE_RULES`` the pool spreads over the decode slice's
+    ``("pod", "data")`` product while weights stay stationary)."""
     caches = []
     for kind in cfg.block_pattern:
         if kind == "attn":
-            c = {"k": (None, "cache_batch", "seq", "kv_heads", None),
-                 "v": (None, "cache_batch", "seq", "kv_heads", None)}
+            if paged:
+                c = {"k": (None, "cache_batch", None, "kv_heads", None),
+                     "v": (None, "cache_batch", None, "kv_heads", None)}
+            else:
+                c = {"k": (None, "cache_batch", "seq", "kv_heads", None),
+                     "v": (None, "cache_batch", "seq", "kv_heads", None)}
             if jnp.dtype(cfg.kv_cache_dtype) == jnp.int8:
-                c["k_scale"] = (None, "cache_batch", "seq", "kv_heads")
-                c["v_scale"] = (None, "cache_batch", "seq", "kv_heads")
+                c["k_scale"] = c["k"][:-1]
+                c["v_scale"] = c["v"][:-1]
         elif kind == "mamba":
             c = {"h": (None, "cache_batch", "tp", None),
                  "conv": (None, "cache_batch", None, "tp")}
@@ -309,6 +357,37 @@ def _write_token(buf: jnp.ndarray, new: jnp.ndarray,
                                           mode="drop")
 
 
+def _paged_write_token(pool: jnp.ndarray, new: jnp.ndarray,
+                       pos: jnp.ndarray, tables: jnp.ndarray,
+                       paged: PagedLayout) -> jnp.ndarray:
+    """Write each slot's one-token slice ``new`` (B, 1, ...) into its
+    current block of a ``(pool_rows, block_size, ...)`` pool leaf.
+
+    Slots whose table entry is the sentinel (idle, retired, or still
+    mid-prefill — the scheduler hands ``decode_step`` a sentinel row for
+    them) write into the scratch block, which no live gather ever
+    unmasks."""
+    B = new.shape[0]
+    bi = jnp.clip(pos // paged.block_size, 0, tables.shape[1] - 1)
+    rows = tables[jnp.arange(B), bi]
+    return pool.at[rows, pos % paged.block_size].set(
+        new[:, 0].astype(pool.dtype))
+
+
+def _paged_gather(pool: jnp.ndarray, tables: jnp.ndarray,
+                  paged: PagedLayout) -> jnp.ndarray:
+    """(pool_rows, block_size, ...) pool + (B, max_blocks) tables -> a
+    (B, max_blocks * block_size, ...) contiguous-cache view.
+
+    Sentinel entries gather the scratch block; those positions sit at or
+    beyond ``kv_len``, so the attention mask turns them into exact-zero
+    contributions and the view reduces bit-identically to a contiguous
+    ``(B, max_len, ...)`` cache of the same total length."""
+    B, max_blocks = tables.shape
+    view = pool[jnp.clip(tables, 0, paged.sentinel)]
+    return view.reshape((B, max_blocks * paged.block_size) + pool.shape[2:])
+
+
 def _quantize_kv(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(..., hd) -> int8 codes + per-(token, head) fp32 scale (RAELLA-style
     low-precision storage with a digital correction factor)."""
@@ -324,11 +403,15 @@ def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 
 def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
-                 pos: jnp.ndarray, plans=None) -> tuple[dict, jnp.ndarray]:
+                 pos: jnp.ndarray, plans=None, tables=None,
+                 paged: PagedLayout | None = None) -> tuple[dict, jnp.ndarray]:
     """Single-token attention against the (sequence-sharded) KV cache.
 
     ``pos`` is a scalar (lockstep: the whole batch shares one position) or
-    a ``(B,)`` vector (continuous batching: one position per slot).
+    a ``(B,)`` vector (continuous batching: one position per slot). With
+    ``tables``/``paged`` the cache leaves are block pools: the new token
+    scatters into each slot's current block and attention reads a
+    block-table gather of the slot's history.
     """
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -344,21 +427,36 @@ def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
     k_new = shard(k_new, "cache_batch", None, None, None)
     v_new = shard(v_new, "cache_batch", None, None, None)
     int8_cache = jnp.dtype(cfg.kv_cache_dtype) == jnp.int8
+    if tables is not None:
+        write = lambda buf, new: shard(  # noqa: E731
+            _paged_write_token(buf, new, pos, tables, paged),
+            "cache_batch", None, "kv_heads", None)
+        gather = lambda buf: _paged_gather(buf, tables, paged)  # noqa: E731
+        if int8_cache:
+            write_s = lambda buf, new: _paged_write_token(  # noqa: E731
+                buf, new, pos, tables, paged)
+    else:
+        write = write_s = lambda buf, new: _write_token(  # noqa: E731
+            buf, new, pos)
+        gather = lambda buf: buf  # noqa: E731
     if int8_cache:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
         new_cache = {
-            "k": _write_token(cache["k"], kq, pos),
-            "v": _write_token(cache["v"], vq, pos),
-            "k_scale": _write_token(cache["k_scale"], ks, pos),
-            "v_scale": _write_token(cache["v_scale"], vs, pos),
+            "k": write(cache["k"], kq),
+            "v": write(cache["v"], vq),
+            "k_scale": write_s(cache["k_scale"], ks),
+            "v_scale": write_s(cache["v_scale"], vs),
         }
-        k_cache = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
-        v_cache = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+        k_cache = _dequantize_kv(gather(new_cache["k"]),
+                                 gather(new_cache["k_scale"]), x.dtype)
+        v_cache = _dequantize_kv(gather(new_cache["v"]),
+                                 gather(new_cache["v_scale"]), x.dtype)
     else:
-        k_cache = _write_token(cache["k"], k_new, pos)
-        v_cache = _write_token(cache["v"], v_new, pos)
-        new_cache = {"k": k_cache, "v": v_cache}
+        new_cache = {"k": write(cache["k"], k_new),
+                     "v": write(cache["v"], v_new)}
+        k_cache = gather(new_cache["k"])
+        v_cache = gather(new_cache["v"])
     out = L.chunked_attention(q, k_cache, v_cache, q_positions=positions,
                               kv_len=pos + 1, causal=True)
     y = L.pim_matmul(out.reshape(B, 1, -1), bp["core"]["wo"],
@@ -367,11 +465,13 @@ def _attn_decode(bp: dict, cfg: ArchConfig, cache: dict, x: jnp.ndarray,
 
 
 def _decode_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
-                  cache: dict, x: jnp.ndarray, pos: jnp.ndarray, plan=None):
+                  cache: dict, x: jnp.ndarray, pos: jnp.ndarray, plan=None,
+                  tables=None, paged: PagedLayout | None = None):
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
         cache, h = _attn_decode(bp, cfg, cache, h, pos,
-                                plans=_subplan(plan, "core"))
+                                plans=_subplan(plan, "core"),
+                                tables=tables, paged=paged)
     elif kind == "mamba":
         cache, h = S.mamba_decode_step(bp["core"], cfg, cache, h,
                                        plans=_subplan(plan, "core"))
@@ -391,14 +491,30 @@ def _decode_block(kind: str, pattern_idx: int, bp: dict, cfg: ArchConfig,
 
 
 def decode_step(params: dict, cfg: ArchConfig, state: dict,
-                tokens: jnp.ndarray, plans=None) -> tuple[jnp.ndarray, dict]:
+                tokens: jnp.ndarray, plans=None, *, block_tables=None,
+                paged: PagedLayout | None = None) -> tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B, 1) ids or (B, 1, D) embeds.
 
     ``state["pos"]`` may be a scalar (lockstep) or ``(B,)`` (per-slot,
     continuous batching); every slot's position advances by one.
+
+    With a paged state, pass ``block_tables`` ((B, max_blocks) int32 pool
+    rows, sentinel = ``paged.sentinel`` for unmapped entries) and the
+    matching ``paged`` layout: each slot writes its token into its
+    current block and attends over a block-table gather — bit-identical
+    to the contiguous cache when ``max_blocks * block_size == max_len``
+    (masked positions contribute exact zeros either way). Slots the
+    scheduler does not want touched (mid-prefill) should be handed an
+    all-sentinel table row, which turns their write into a scratch-block
+    no-op.
     """
+    if (block_tables is None) != (paged is None):
+        raise ValueError("block_tables and paged must be passed together")
     x = embed_inputs(params, cfg, tokens)
     pos = state["pos"]
+    if block_tables is not None and pos.ndim == 0:
+        raise ValueError("paged decode needs per-slot positions "
+                         "(init_decode_state(..., per_slot_pos=True))")
     # sow-style work-stats collection (see layers.collect_pim_stats):
     # stats tracers born inside the scanned block body belong to the
     # scan sub-trace, so the body opens its OWN sink and re-emits the
@@ -415,7 +531,8 @@ def decode_step(params: dict, cfg: ArchConfig, state: dict,
             for i, kind in enumerate(cfg.block_pattern):
                 c, h = _decode_block(kind, i, rep_params[i], cfg,
                                      rep_caches[i], h, pos,
-                                     plan=rep_plans[i])
+                                     plan=rep_plans[i],
+                                     tables=block_tables, paged=paged)
                 new_caches.append(c)
         if collect:
             totals = {k: jnp.asarray(v)
@@ -656,3 +773,144 @@ def insert_request(state: dict, one: dict, slot: jnp.ndarray) -> dict:
         state["caches"], one["caches"])
     pos = state["pos"].at[slot].set(jnp.asarray(one["pos"], jnp.int32))
     return {"caches": caches, "pos": pos}
+
+
+# ----------------------------------------------------------------- paged
+def prefill_chunk_paged(params: dict, cfg: ArchConfig, state: dict,
+                        tokens: jnp.ndarray, *, slot, table_row, pos0,
+                        paged: PagedLayout,
+                        plans=None) -> tuple[jnp.ndarray, dict]:
+    """Advance one slot's in-flight prefill *inside* the shared block pool
+    (copy-free admission: the prompt streams straight into the slot's
+    claimed blocks, never through a contiguous staging region).
+
+    ``state`` is the batched paged decode state; ``tokens`` (1, C) is the
+    next prompt chunk for ``slot``, whose earlier context — including
+    refcount-shared prefix blocks — is read back through ``table_row``
+    ((max_blocks,) int32 pool rows). ``pos0`` is the chunk's absolute
+    start offset, passed explicitly because the batched ``pos[slot]``
+    keeps advancing with every interleaved decode step while this slot is
+    still prefilling (those decode writes land in the sentinel scratch
+    block); the final value ``pos0 + C`` is written back into
+    ``pos[slot]`` so a completed prefill leaves the slot decode-ready.
+
+    Bit-identity with the contiguous ``prefill_chunk`` path follows from
+    the gather argument in ``_paged_gather``; the shared-prefix case
+    additionally relies on chunked prefill being boundary-independent for
+    float KV caches (the chunk after a shared prefix starts at a block
+    boundary, not necessarily a ``prefill_chunk`` multiple).
+
+    Attention-only patterns: recurrent (mamba/rwkv) carries cannot be
+    rebuilt from paged context — recurrent archs stage their prefill at
+    B=1 and hand the result over via ``insert_request_paged``.
+    """
+    bad = [k for k in cfg.block_pattern if k != "attn"]
+    if bad:
+        raise ValueError(
+            f"prefill_chunk_paged supports attention-only patterns; "
+            f"{cfg.name} has {bad} blocks — stage the prefill at B=1 and "
+            f"use insert_request_paged")
+    int8_cache = jnp.dtype(cfg.kv_cache_dtype) == jnp.int8
+    x = embed_inputs(params, cfg, tokens)
+    B, C = x.shape[0], x.shape[1]
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    abs_pos = pos0 + jnp.arange(C, dtype=jnp.int32)          # (C,)
+    positions = jnp.broadcast_to(abs_pos[None], (B, C))
+    max_blocks = table_row.shape[0]
+    rows_c = table_row[jnp.clip(abs_pos // paged.block_size, 0,
+                                max_blocks - 1)]             # (C,)
+    offs_c = abs_pos % paged.block_size
+    tables1 = table_row[None]                                # (1, max_blocks)
+
+    def repeat_body(carry, xs):
+        h = carry
+        rep_params, rep_caches, rep_plans = xs
+        new_caches = []
+        for i, _ in enumerate(cfg.block_pattern):
+            bp, cache, plan = rep_params[i], rep_caches[i], rep_plans[i]
+            core_plan = _subplan(plan, "core")
+            hn = L.rmsnorm(bp["norm1"], h, cfg.norm_eps)
+            q, k, v = L.qkv_project(bp["core"], cfg, hn, positions, core_plan)
+            if int8_cache:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                cache = {
+                    "k": cache["k"].at[rows_c, offs_c].set(kq[0]),
+                    "v": cache["v"].at[rows_c, offs_c].set(vq[0]),
+                    "k_scale": cache["k_scale"].at[rows_c, offs_c].set(ks[0]),
+                    "v_scale": cache["v_scale"].at[rows_c, offs_c].set(vs[0]),
+                }
+                k_all = _dequantize_kv(
+                    _paged_gather(cache["k"], tables1, paged),
+                    _paged_gather(cache["k_scale"], tables1, paged), hn.dtype)
+                v_all = _dequantize_kv(
+                    _paged_gather(cache["v"], tables1, paged),
+                    _paged_gather(cache["v_scale"], tables1, paged), hn.dtype)
+            else:
+                cache = {
+                    "k": cache["k"].at[rows_c, offs_c].set(
+                        k[0].astype(cache["k"].dtype)),
+                    "v": cache["v"].at[rows_c, offs_c].set(
+                        v[0].astype(cache["v"].dtype)),
+                }
+                k_all = _paged_gather(cache["k"], tables1, paged).astype(
+                    hn.dtype)
+                v_all = _paged_gather(cache["v"], tables1, paged).astype(
+                    hn.dtype)
+            cache = {kk: shard(vv, "cache_batch", None, "kv_heads", None)
+                     if vv.ndim == 4 else vv for kk, vv in cache.items()}
+            q = shard(q, "cache_batch", None, None, None)
+            o = L.chunked_attention(q, k_all, v_all, q_positions=positions,
+                                    kv_len=pos0 + C, causal=True)
+            h = h + L.pim_matmul(o.reshape(B, C, -1), bp["core"]["wo"],
+                                 L.plan_leaf(core_plan, "wo"), cfg)
+            hn2 = L.rmsnorm(bp["norm2"], h, cfg.norm_eps)
+            if cfg.moe_layer(i):
+                ffn_out = L.moe_block(bp["ffn"], cfg, hn2,
+                                      plans=_subplan(plan, "ffn"))
+            else:
+                ffn_out = L.mlp_block(bp["ffn"], cfg, hn2,
+                                      plans=_subplan(plan, "ffn"))
+            h = shard(h + ffn_out, "batch", "seq", None)
+            new_caches.append(cache)
+        return h, tuple(new_caches)
+
+    logits, caches = _run_prefill_body(params, cfg, x, state["caches"],
+                                       repeat_body, plans=plans)
+    pos = state["pos"].at[jnp.asarray(slot, jnp.int32)].set(pos0 + C)
+    return logits, {"caches": caches, "pos": pos}
+
+
+def insert_request_paged(state: dict, one: dict, slot, table_row,
+                         paged: PagedLayout) -> dict:
+    """Scatter a contiguous B=1 prefilled state into a slot's pool blocks.
+
+    The staged-admission / cross-slice handoff path: recurrent archs
+    prefill at B=1 off-pool (their carries cannot be rebuilt from paged
+    context), and disaggregated serving prefills on a separate mesh slice
+    before handing the filled blocks to the decode slice. Attention
+    leaves scatter every position ``p`` of the contiguous cache into pool
+    row ``table_row[p // block_size]`` at offset ``p % block_size``
+    (sentinel rows absorb the unused tail in scratch); recurrent carries
+    and ``pos[slot]`` splice exactly like ``insert_request``.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    bs = paged.block_size
+    new_caches = []
+    for cache, cone in zip(state["caches"], one["caches"]):
+        if "k" in cache:  # attn: pool (R, rows, bs, K[, hd])
+            max_len = cone["k"].shape[2]
+            p = jnp.arange(max_len, dtype=jnp.int32)
+            rows = jnp.clip(
+                table_row[jnp.clip(p // bs, 0, table_row.shape[0] - 1)],
+                0, paged.sentinel)
+            c = {kk: cache[kk].at[:, rows, p % bs].set(
+                     cone[kk][:, 0].astype(cache[kk].dtype))
+                 for kk in cache}
+        else:  # recurrent carries: per-slot batch axis
+            c = jax.tree.map(
+                lambda cc, oo: jax.lax.dynamic_update_slice_in_dim(
+                    cc, oo.astype(cc.dtype), slot, axis=1), cache, cone)
+        new_caches.append(c)
+    pos = state["pos"].at[slot].set(jnp.asarray(one["pos"], jnp.int32))
+    return {"caches": new_caches, "pos": pos}

@@ -1,18 +1,23 @@
-"""Serving layer: lockstep reference engine + continuous-batching engine."""
+"""Serving layer: lockstep reference, continuous batching, paged KV."""
 
 from repro.serve.engine import GenerationResult, ServeEngine  # noqa: F401
+from repro.serve.paged import BlockAllocator, PagedServeEngine  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousServeEngine,
     EngineStats,
     Request,
     RequestOutput,
+    ServeStats,
 )
 
 __all__ = [
+    "BlockAllocator",
     "ContinuousServeEngine",
     "EngineStats",
     "GenerationResult",
+    "PagedServeEngine",
     "Request",
     "RequestOutput",
     "ServeEngine",
+    "ServeStats",
 ]

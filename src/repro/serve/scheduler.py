@@ -76,11 +76,18 @@ class RequestOutput:
 
 
 @dataclasses.dataclass
-class EngineStats:
+class ServeStats:
     decode_steps: int = 0                  # batched decode_step calls
     decode_slot_tokens: int = 0            # useful tokens over those calls
     prefill_chunks: int = 0
     completed: int = 0
+    # block-pool accounting (paged engine — repro.serve.paged; zero on
+    # the contiguous engine, whose per-slot regions are never shared)
+    blocks_in_use: int = 0                 # current pool occupancy
+    peak_blocks_in_use: int = 0
+    evictions: int = 0                     # preempt-by-recompute events
+    prefix_block_hits: int = 0             # shared-prefix blocks reused
+    admission_waits: int = 0               # iterations head-of-queue waited
 
     @property
     def decode_utilization(self) -> float:
@@ -88,9 +95,13 @@ class EngineStats:
 
         Absolute tokens/step in ``[0, n_slots]`` — divide by the
         engine's ``n_slots`` for a 0..1 fraction (as
-        ``benchmarks/serve_continuous.py`` does)."""
+        ``benchmarks/serve_continuous.py`` does). A fresh engine
+        (``decode_steps == 0``) reports 0.0, never a division error."""
         return 0.0 if self.decode_steps == 0 else (
             self.decode_slot_tokens / self.decode_steps)
+
+
+EngineStats = ServeStats   # back-compat alias (pre-paged-KV name)
 
 
 @dataclasses.dataclass
@@ -135,7 +146,7 @@ class ContinuousServeEngine:
                                          per_slot_pos=True)
         self.slots: list[_Slot | None] = [None] * n_slots
         self.queue: collections.deque[Request] = collections.deque()
-        self.stats = EngineStats()
+        self.stats = ServeStats()
         self._chunk = jax.jit(
             lambda p, pl, st, toks: T.prefill_chunk(p, cfg, st, toks,
                                                     plans=pl))
@@ -170,9 +181,12 @@ class ContinuousServeEngine:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     # ------------------------------------------------------------- engine
-    def _sample(self, slot: _Slot, logits_row: jnp.ndarray,
+    def _sample(self, slot: _Slot, logits_row: np.ndarray,
                 greedy_tok: int) -> int:
-        """Pick slot's next token. logits_row: (vocab,) for this slot."""
+        """Pick slot's next token. logits_row: host (vocab,) for this slot
+        (the scheduler pulls all slots' logits in ONE ``jax.device_get``
+        per iteration — see ``step`` — so the sampling path never adds a
+        per-slot sync)."""
         if slot.req.temperature <= 0.0:
             return greedy_tok
         if slot.key is None:
@@ -181,7 +195,7 @@ class ContinuousServeEngine:
             slot.key, slot.n_sampled - 1)
         slot.n_sampled += 1
         return int(jax.random.categorical(
-            key, logits_row / slot.req.temperature))
+            key, jnp.asarray(logits_row) / slot.req.temperature))
 
     def _commit(self, idx: int, slot: _Slot, tok: int,
                 finished: list[RequestOutput]) -> None:
@@ -205,7 +219,12 @@ class ContinuousServeEngine:
     def step(self) -> list[RequestOutput]:
         """One scheduler iteration: admit → prefill one chunk → decode.
 
-        Returns the requests that finished during this iteration.
+        Returns the requests that finished during this iteration. Host
+        syncs are batched: all prefill-completion logits come back in one
+        ``jax.device_get``, and the decode step pulls every slot's last
+        logits row at once (greedy argmax then runs host-side —
+        ``np.argmax`` and ``jnp.argmax`` both take the first maximum, so
+        the tie-break is bit-identical).
         """
         finished: list[RequestOutput] = []
         # 1. admit queued requests into free slots
@@ -214,6 +233,7 @@ class ContinuousServeEngine:
                 self.slots[i] = _Slot(req=self.queue.popleft(),
                                       state1=self._template1)
         # 2. advance each prefilling slot by one chunk
+        done: list[tuple[int, _Slot, Any]] = []
         for i, slot in enumerate(self.slots):
             if slot is None or slot.state1 is None:
                 continue
@@ -226,13 +246,18 @@ class ContinuousServeEngine:
             slot.n_prefilled = hi
             self.stats.prefill_chunks += 1
             if hi == prompt.shape[0]:
-                # prompt done: sample the first token, splice into the batch
+                # prompt done: splice into the batch; first-token logits
+                # are committed below, after ONE batched device_get
                 self.state = self._insert(self.state, slot.state1,
                                           jnp.asarray(i, jnp.int32))
                 slot.state1 = None
-                greedy = int(jnp.argmax(logits[0, -1]))
-                self._commit(i, slot, self._sample(slot, logits[0, -1],
-                                                   greedy), finished)
+                done.append((i, slot, logits[0, -1]))
+        if done:
+            rows = jax.device_get([lg for _, _, lg in done])
+            for (i, slot, _), row in zip(done, rows):
+                self._commit(i, slot,
+                             self._sample(slot, row, int(np.argmax(row))),
+                             finished)
         # 3. one batched decode step for every mid-generation slot
         live = [i for i, s in enumerate(self.slots)
                 if s is not None and s.state1 is None]
@@ -244,12 +269,19 @@ class ContinuousServeEngine:
                                               self.state, jnp.asarray(toks))
             self.stats.decode_steps += 1
             self.stats.decode_slot_tokens += len(live)
-            greedy = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+            rows = jax.device_get(logits[:, -1, :])
+            greedy = np.argmax(rows, axis=-1)
             for i in live:
                 slot = self.slots[i]
-                self._commit(i, slot, self._sample(slot, logits[i, -1],
+                self._commit(i, slot, self._sample(slot, rows[i],
                                                    int(greedy[i])), finished)
         return finished
+
+    def _drain_budget(self) -> int:
+        """Iteration cap for ``run`` (the paged engine widens it: evicted
+        requests recompute from scratch)."""
+        return ((len(self.queue) + len(self.active_uids) + 1)
+                * (self.max_len + self.max_len // self.prefill_chunk + 2))
 
     def run(self, requests: list[Request] | None = None,
             max_iters: int | None = None) -> list[RequestOutput]:
@@ -259,9 +291,7 @@ class ContinuousServeEngine:
         """
         for r in requests or ():
             self.submit(r)
-        budget = max_iters if max_iters is not None else (
-            (len(self.queue) + len(self.active_uids) + 1)
-            * (self.max_len + self.max_len // self.prefill_chunk + 2))
+        budget = max_iters if max_iters is not None else self._drain_budget()
         outputs: list[RequestOutput] = []
         it = 0
         while self.has_work:
