@@ -5,14 +5,41 @@ Prints ``name,us_per_call,derived`` CSV (derived = the headline metric of
 that artifact). ``REGISTRY`` is the canonical list of runnable entries —
 ``tests/test_benchmarks_smoke.py`` executes every entry at its
 ``smoke_kwargs`` toy sizes and asserts JSON-serializable output.
+
+Result recording (the ONE schema every benchmark persists through)::
+
+  python benchmarks/run.py --record serve_paged    # -> BENCH_serve_paged.json
+  python benchmarks/run.py --record serve_paged --full   # full-size kwargs
+  python benchmarks/run.py --check serve_paged     # re-run + compare
+
+``--record`` runs an entry (at its smoke kwargs by default) and writes
+``BENCH_<entry>.json``: ``{schema, entry, kwargs, git_sha, derived,
+result}``. ``--check`` re-runs with the *stored* kwargs and compares the
+result trees leaf-by-leaf — wall-clock keys (``*_s``, ``*_us``,
+``*seconds*``, ``*tok_per_s*``) are pruned since timings are
+nondeterministic; remaining floats compare at ``rtol`` (default 0.1),
+everything else exactly. CI's perf-smoke leg runs ``--check serve_paged``
+so schema or determinism drift fails fast.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import importlib
+import json
+import os
+import re
+import subprocess
+import sys
 import time
 from typing import Callable
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA_VERSION = 1
+# nondeterministic leaves: wall times and throughputs (latency histogram
+# metric names also carry the "seconds" suffix — Prometheus convention)
+_TIMING_KEY = re.compile(r"(_s$|_us$|seconds|tok_per_s|_time$)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +187,122 @@ def _row(name, fn, derive):
     return out
 
 
-def main() -> None:
+# ------------------------------------------------------- record / check
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_ROOT,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def record_path(name: str) -> str:
+    return os.path.join(_ROOT, f"BENCH_{name}.json")
+
+
+def write_record(name: str, result, kwargs: dict, *,
+                 derived: str | None = None, path: str | None = None) -> str:
+    """Persist one benchmark result under the shared record schema.
+
+    Benchmarks that write a JSON artifact route through here (rather
+    than each growing its own ad-hoc writer) so ``--check`` and CI read
+    one shape. ``default=float`` normalizes numpy scalars.
+    """
+    doc = {"schema": SCHEMA_VERSION, "entry": name, "kwargs": kwargs,
+           "git_sha": _git_sha(), "derived": derived, "result": result}
+    path = path if path is not None else record_path(name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    return path
+
+
+def record(name: str, *, full: bool = False) -> str:
+    entry = REGISTRY[name]
+    kwargs = {} if full else dict(entry.smoke_kwargs)
+    out = entry.run(**kwargs)
+    return write_record(name, out, kwargs, derived=entry.derive(out))
+
+
+def _compare(base, new, path: str, problems: list[str],
+             rtol: float) -> None:
+    """Leaf-by-leaf tolerance compare; appends a line per mismatch."""
+    if isinstance(base, dict):
+        if not isinstance(new, dict):
+            problems.append(f"{path}: dict -> {type(new).__name__}")
+            return
+        for k, v in base.items():
+            if _TIMING_KEY.search(str(k)):
+                continue                    # wall clocks: pruned subtree
+            if k not in new:
+                problems.append(f"{path}.{k}: missing")
+            else:
+                _compare(v, new[k], f"{path}.{k}", problems, rtol)
+        return
+    if isinstance(base, (list, tuple)):
+        if not isinstance(new, (list, tuple)) or len(new) != len(base):
+            problems.append(f"{path}: list shape {base!r} vs {new!r}")
+            return
+        for i, (b, n) in enumerate(zip(base, new)):
+            _compare(b, n, f"{path}[{i}]", problems, rtol)
+        return
+    if isinstance(base, bool) or isinstance(new, bool):
+        if base is not new:
+            problems.append(f"{path}: {base!r} vs {new!r}")
+        return
+    if isinstance(base, (int, float)) and isinstance(new, (int, float)):
+        if isinstance(base, int) and isinstance(new, int):
+            if base != new:
+                problems.append(f"{path}: {base} vs {new}")
+        elif abs(new - base) > rtol * max(abs(base), 1e-12):
+            problems.append(f"{path}: {base!r} vs {new!r} (rtol {rtol})")
+        return
+    if base != new:
+        problems.append(f"{path}: {base!r} vs {new!r}")
+
+
+def check(name: str, *, rtol: float = 0.1) -> list[str]:
+    """Re-run ``name`` with its recorded kwargs; return mismatch lines
+    (empty = the recorded baseline still reproduces)."""
+    path = record_path(name)
+    if not os.path.exists(path):
+        return [f"{path}: no recorded baseline — run --record {name}"]
+    with open(path) as f:
+        doc = json.load(f)
+    out = REGISTRY[name].run(**doc.get("kwargs", {}))
+    out = json.loads(json.dumps(out, default=float))   # normalize as stored
+    problems: list[str] = []
+    _compare(doc["result"], out, "result", problems, rtol)
+    return problems
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--record", metavar="ENTRY", choices=sorted(REGISTRY),
+                    help="run ENTRY and write BENCH_<ENTRY>.json")
+    ap.add_argument("--check", metavar="ENTRY", choices=sorted(REGISTRY),
+                    help="re-run ENTRY with its recorded kwargs and compare "
+                         "against BENCH_<ENTRY>.json (exit 1 on drift)")
+    ap.add_argument("--full", action="store_true",
+                    help="--record at the entry's full-size default kwargs "
+                         "instead of its smoke kwargs")
+    ap.add_argument("--rtol", type=float, default=0.1,
+                    help="--check float tolerance (relative)")
+    args = ap.parse_args(argv)
+    if args.record:
+        print(f"recorded {args.record} -> {record(args.record, full=args.full)}")
+        return
+    if args.check:
+        problems = check(args.check, rtol=args.rtol)
+        if problems:
+            print(f"{args.check}: {len(problems)} mismatches vs "
+                  f"{record_path(args.check)}")
+            for p in problems:
+                print(f"  {p}")
+            sys.exit(1)
+        print(f"{args.check}: OK vs {record_path(args.check)}")
+        return
     print("name,us_per_call,derived")
     for name, entry in REGISTRY.items():
         _row(name, entry.run, entry.derive)

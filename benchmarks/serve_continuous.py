@@ -22,7 +22,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import transformer as T
 from repro.serve import ContinuousServeEngine, Request, ServeEngine
 
@@ -86,13 +86,16 @@ def run(arch: str = "yi-6b", n_groups: int = 3, n_slots: int = 4,
             reqs.append(Request(uid=uid, prompt=g.prompts[b],
                                 max_new_tokens=steps))
             uid += 1
+    tel = obs.ServeTelemetry(engine="continuous")
     cont = ContinuousServeEngine(cfg, params, n_slots=n_slots,
                                  max_len=max_len,
-                                 prefill_chunk=prefill_chunk)
+                                 prefill_chunk=prefill_chunk,
+                                 telemetry=tel)
     t0 = time.monotonic()
     outs = cont.run(reqs)
     cont_dt = time.monotonic() - t0
     cont_util = cont.stats.decode_utilization / n_slots
+    tel.record_stats(cont.stats)
 
     mismatches = [o.uid for o in outs
                   if not np.array_equal(o.tokens, lock_outputs[o.uid])]
@@ -109,6 +112,8 @@ def run(arch: str = "yi-6b", n_groups: int = 3, n_slots: int = 4,
         "continuous_s": cont_dt,
         "bit_identical": not mismatches,
         "mismatched_uids": mismatches,
+        "stats": cont.stats.snapshot(),
+        "metrics": obs.snapshot(tel.registry),
     }
 
 

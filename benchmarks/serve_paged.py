@@ -15,17 +15,20 @@ per-request lockstep runs.
 
   PYTHONPATH=src:. python benchmarks/serve_paged.py [--arch yi-6b]
 
-Writes ``BENCH_serve_paged.json`` and exits non-zero if the paged engine
-does not beat contiguous admission or any output diverges. With >= 8
-devices the trace is also replayed on disaggregated prefill/decode mesh
-slices (``repro.launch.mesh.make_disaggregated_meshes``) and checked
-bit-identical again.
+Writes ``BENCH_serve_paged.json`` through the shared record schema
+(``benchmarks.run.write_record`` — the same file ``benchmarks/run.py
+--record/--check serve_paged`` reads) and exits non-zero if the paged
+engine does not beat contiguous admission or any output diverges. With
+>= 8 devices the trace is also replayed on disaggregated prefill/decode
+mesh slices (``repro.launch.mesh.make_disaggregated_meshes``) and
+checked bit-identical again. The paged engine runs under a
+``repro.obs.ServeTelemetry``; its metrics snapshot rides along in the
+result (``"metrics"``).
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -42,7 +45,7 @@ if "jax" not in sys.modules and "xla_force_host_platform_device_count" \
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import transformer as T
 from repro.serve import (
     ContinuousServeEngine,
@@ -108,10 +111,13 @@ def run(arch: str = "yi-6b", n_requests: int = 10, block_size: int = 4,
                                  max_len=max_len, prefill_chunk=block_size)
     c = _drive(cont, reqs)
 
+    tel = obs.ServeTelemetry(engine="paged")
     paged = PagedServeEngine(cfg, params, n_slots=paged_slots,
                              max_len=max_len, prefill_chunk=block_size,
-                             block_size=block_size, n_blocks=n_blocks)
+                             block_size=block_size, n_blocks=n_blocks,
+                             telemetry=tel)
     p = _drive(paged, reqs)
+    tel.record_stats(paged.stats)
 
     refs = ServeEngine(cfg, params, max_len=max_len)
     mismatches = []
@@ -145,6 +151,8 @@ def run(arch: str = "yi-6b", n_requests: int = 10, block_size: int = 4,
         "paged_sustains_more": (
             p["peak_admitted"] > c["peak_admitted"]
             and p["mean_admitted"] > c["mean_admitted"]),
+        "stats": paged.stats.snapshot(),
+        "metrics": obs.snapshot(tel.registry),
     }
 
     # ---- disaggregated prefill/decode slices (optional; needs 8 devices)
@@ -168,13 +176,19 @@ def run(arch: str = "yi-6b", n_requests: int = 10, block_size: int = 4,
 
 
 def main() -> None:
+    from benchmarks.run import write_record
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--block-size", type=int, default=4)
-    ap.add_argument("--out", default="BENCH_serve_paged.json")
+    ap.add_argument("--out", default=None,
+                    help="record path (default BENCH_serve_paged.json at "
+                         "the repo root, the --check baseline)")
     args = ap.parse_args()
-    out = run(args.arch, args.requests, args.block_size)
+    kwargs = dict(arch=args.arch, n_requests=args.requests,
+                  block_size=args.block_size)
+    out = run(**kwargs)
     print(f"{out['arch']}: {out['requests']} requests, "
           f"{out['budget_tokens']}-token KV budget "
           f"({out['n_blocks']} blocks of {out['block_size']} / "
@@ -195,9 +209,8 @@ def main() -> None:
               f"{out['disaggregated_devices']} devices: bit-identical "
               f"{out['disaggregated_bit_identical']} "
               f"({out['disaggregated_s']}s)")
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-    print(f"wrote {args.out}")
+    path = write_record("serve_paged", out, kwargs, path=args.out)
+    print(f"wrote {path}")
     if not out["bit_identical"]:
         raise SystemExit(f"outputs diverged: {out['mismatched']}")
     if not out["paged_sustains_more"]:

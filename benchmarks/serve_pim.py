@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import pim
 from repro.models import transformer as T
 from repro.serve import ServeEngine
@@ -83,7 +83,8 @@ def run_speculation(arch: str = "yi-6b", requests: int = 2,
     """Converts/token on a real decode trace: ``pim_mode='exact'`` with
     speculation (paper §4.3) in the jitted decode step.
 
-    The decode step runs under ``layers.collect_pim_stats``: every
+    The decode step is wrapped with ``layers.with_pim_stats`` (the same
+    decorator the serve engines use for live telemetry): every
     exact-path projection's ``SpeculationStats`` is collected at trace
     time (scanned blocks re-emit totals as scan outputs) and the summed
     work counters ride the jitted step as auxiliary outputs — ADC
@@ -92,7 +93,10 @@ def run_speculation(arch: str = "yi-6b", requests: int = 2,
     Fig. 14 convert economy. Speculation runs the fused
     ``fused_spec_crossbar`` kernel (recovery converts billed
     analytically from the failure mask), so exact+speculation decode is
-    one kernel launch per projection pass, same as the static path.
+    one kernel launch per projection pass, same as the static path. The
+    totals also flow through ``repro.obs.record_pim_totals`` — the
+    result's ``"metrics"`` block is the same Prometheus-shaped snapshot
+    ``serve --metrics-out`` exports.
     """
     if steps < 2:
         raise ValueError("steps >= 2: one greedy token from prefill plus "
@@ -107,18 +111,14 @@ def run_speculation(arch: str = "yi-6b", requests: int = 2,
         jax.random.key(seed + 1), (requests, prompt_len), 0, cfg.vocab_size))
     plans, _ = pim.prepare_pim_params(params, cfg, prompts)
 
-    def step(p, pl, st, tok):
-        with L.collect_pim_stats() as acc:
-            logits, st2 = T.decode_step(p, cfg, st, tok, plans=pl)
-            totals = L.pim_stats_totals(acc)
-        return logits, st2, totals
-
-    step_j = jax.jit(step)
+    step_j = jax.jit(L.with_pim_stats(
+        lambda p, pl, st, tok: T.decode_step(p, cfg, st, tok, plans=pl)))
     prefill_j = jax.jit(lambda p, pl, toks: T.prefill(
         p, cfg, toks, max_len=prompt_len + steps + 1, plans=pl))
     logits, state = prefill_j(params, plans, jnp.asarray(prompts))
     tok = jnp.argmax(logits[:, -1, :], -1)[:, None]
     step_j(params, plans, state, tok)  # warm the decode jit
+    registry = obs.MetricsRegistry()
     totals = dict.fromkeys(L.PIM_STAT_KEYS, 0)
     t0 = time.monotonic()
     for _ in range(steps - 1):
@@ -128,6 +128,8 @@ def run_speculation(arch: str = "yi-6b", requests: int = 2,
             totals[k] += int(tot[k])
     dt = time.monotonic() - t0
     tokens = requests * (steps - 1)
+    derived = obs.record_pim_totals(registry, totals, tokens, adc_bits,
+                                    engine="lockstep")
     converts = totals["adc_converts"]
     no_spec = totals["no_spec_converts"]
     return {
@@ -140,6 +142,9 @@ def run_speculation(arch: str = "yi-6b", requests: int = 2,
         "spec_failure_rate": round(
             totals["spec_failures"] / max(totals["spec_attempts"], 1), 5),
         "recovery_saturations": totals["recovery_saturations"],
+        "pj_per_token": round(derived["pj_per_token"], 2),
+        "adc_pj_per_token": round(derived["adc_pj_per_token"], 2),
+        "metrics": obs.snapshot(registry),
     }
 
 
@@ -164,6 +169,8 @@ def main() -> None:
               f"{out['no_spec_converts_per_token']:.1f} no-spec "
               f"({out['convert_ratio_vs_no_spec']}x), failure rate "
               f"{out['spec_failure_rate']}")
+        print(f"  {out['pj_per_token']:.1f} pJ/token estimated "
+              f"(ADC {out['adc_pj_per_token']:.1f})")
         return
     out = run(args.arch, args.requests, args.prompt_len, args.steps)
     print(f"{out['arch']}: {args.requests} requests x {args.steps} steps")

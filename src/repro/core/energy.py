@@ -267,3 +267,27 @@ def titanium_law(energy_per_convert: float, converts_per_mac: float,
                  macs: float, utilization: float) -> float:
     """The Titanium Law, verbatim (Table 2)."""
     return energy_per_convert * converts_per_mac * macs * (1.0 / utilization)
+
+
+def pim_work_energy_pj(totals: dict, adc_bits: int) -> dict:
+    """Price collected serve-time work totals with the component model.
+
+    ``totals`` is a ``repro.models.layers.pim_stats_totals`` dict (host
+    ints) from the jitted decode step. This is the live counterpart of
+    :func:`analyze_layer`: the ADC term is exact (converts are counted,
+    not modeled), the digital term is the same shift+add-per-convert
+    coefficient the static model uses, and the crossbar term scales the
+    per-cell energy by the counted MACs at the mean input/weight
+    densities. Buffer/network energies need mapping information a live
+    counter stream does not carry and are omitted — ADC dominance
+    (Fig. 1) makes this a tight lower bound.
+    """
+    converts = float(totals.get("adc_converts", 0))
+    macs = float(totals.get("macs", 0))
+    e_adc = converts * adc_energy_per_convert(adc_bits)
+    e_digital = converts * E_DIGITAL_MAC * 0.1
+    e_xbar = macs * E_CELL_MAX * AVG_INPUT_DENSITY \
+        * AVG_WEIGHT_DENSITY["center"]
+    return {"e_adc_pj": e_adc, "e_digital_pj": e_digital,
+            "e_xbar_pj": e_xbar,
+            "total_pj": e_adc + e_digital + e_xbar}

@@ -34,7 +34,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import pim
 from repro.models import transformer as T
 from repro.serve import (
@@ -81,6 +81,16 @@ def main() -> None:
                          "and eviction-by-recompute)")
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot here as JSON "
+                         "(Prometheus text exposition included; "
+                         "repro.obs.export.write_metrics)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace (Perfetto-loadable) span "
+                         "log of the run here")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the run in jax.profiler start/stop_trace "
+                         "writing the device profile here")
     ap.add_argument("--pim", choices=("off", "fast", "exact", "int8"),
                     default="off")
     ap.add_argument("--pim-slicing", default=None,
@@ -105,6 +115,11 @@ def main() -> None:
                          "REPRO_KERNEL_BACKEND overrides at dispatch time")
     args = ap.parse_args()
 
+    if args.engine == "lockstep" and (args.metrics_out or args.trace_out
+                                      or args.profile_dir):
+        ap.error("--metrics-out/--trace-out/--profile-dir instrument the "
+                 "continuous/paged scheduler loops; the lockstep "
+                 "reference engine has no request lifecycle to trace")
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -166,6 +181,9 @@ def main() -> None:
         print(res.tokens[:2])
         return
 
+    tel = obs.ServeTelemetry(engine=args.engine,
+                             tracing=args.trace_out is not None,
+                             profile_dir=args.profile_dir)
     trace = build_trace(args.requests, prompt_len=args.prompt_len,
                         steps=args.steps, vocab=cfg.vocab_size)
     for i, r in enumerate(trace):
@@ -176,14 +194,16 @@ def main() -> None:
                                max_len=max_len,
                                prefill_chunk=args.prefill_chunk,
                                block_size=args.block_size,
-                               n_blocks=args.blocks, plans=plans)
+                               n_blocks=args.blocks, plans=plans,
+                               telemetry=tel)
     else:
         eng = ContinuousServeEngine(cfg, params, n_slots=args.slots,
                                     max_len=max_len,
                                     prefill_chunk=args.prefill_chunk,
-                                    plans=plans)
+                                    plans=plans, telemetry=tel)
     t0 = time.monotonic()
-    outs = eng.run(trace)
+    with tel.profile():
+        outs = eng.run(trace)
     dt = time.monotonic() - t0
     total = sum(len(o.tokens) for o in outs)
     st = eng.stats
@@ -197,6 +217,21 @@ def main() -> None:
               f"{eng.alloc.n_blocks} blocks of {args.block_size}, "
               f"{st.prefix_block_hits} prefix hits, {st.evictions} "
               f"evictions, {st.admission_waits} admission waits")
+    tel.record_stats(st)
+    if args.metrics_out:
+        obs.write_metrics(tel.registry, args.metrics_out,
+                          config={"arch": cfg.name, "engine": args.engine,
+                                  "pim_mode": cfg.pim_mode,
+                                  "requests": args.requests,
+                                  "slots": args.slots},
+                          stats=st.snapshot())
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        tel.tracer.write(args.trace_out)
+        print(f"chrome trace ({len(tel.tracer.events())} events) -> "
+              f"{args.trace_out}")
+    if args.profile_dir:
+        print(f"jax profiler trace -> {args.profile_dir}")
     print("first outputs:", {o.uid: o.tokens[:8].tolist() for o in outs[:2]})
 
 

@@ -110,6 +110,28 @@ def pim_stats_totals(stats) -> dict:
     return tot
 
 
+def with_pim_stats(fn):
+    """Wrap a traced function so it also returns summed work totals.
+
+    ``fn``'s body runs under :func:`collect_pim_stats`; the wrapper
+    appends the :func:`pim_stats_totals` dict to ``fn``'s return (tuple
+    returns are extended, single returns become a pair). Jit the
+    *wrapped* function — the totals then ride the jitted call as
+    auxiliary outputs and can join the caller's existing
+    ``jax.device_get`` (the serve engines fetch them with the same host
+    sync that surfaces the logits, so stats collection adds no extra
+    device round-trips).
+    """
+    def wrapped(*args, **kwargs):
+        with collect_pim_stats() as acc:
+            out = fn(*args, **kwargs)
+            totals = pim_stats_totals(acc)
+        if isinstance(out, tuple):
+            return out + (totals,)
+        return out, totals
+    return wrapped
+
+
 class PimTap:
     """Calibration recorder: stands in for a plan leaf during the capture
     forward of ``repro.models.pim.prepare_pim_params``. ``pim_matmul``

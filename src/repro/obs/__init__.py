@@ -1,0 +1,45 @@
+"""repro.obs — unified telemetry: metrics, tracing, profiling hooks.
+
+One low-overhead subsystem every layer reports through: a label-set
+metrics registry with Prometheus/JSON export (``repro.obs.metrics``,
+``repro.obs.export``), a Chrome-trace span recorder
+(``repro.obs.tracing``), and the serve-stack binding that threads both
+through the schedulers plus the PIM work counters and the §2.5 energy
+model (``repro.obs.serve``).
+"""
+
+from repro.obs.export import (  # noqa: F401
+    metrics_document,
+    snapshot,
+    to_prometheus,
+    write_metrics,
+)
+from repro.obs.metrics import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.serve import (  # noqa: F401
+    NULL_TELEMETRY,
+    ServeTelemetry,
+    record_pim_totals,
+)
+from repro.obs.tracing import Tracer  # noqa: F401
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TELEMETRY",
+    "ServeTelemetry",
+    "Tracer",
+    "metrics_document",
+    "record_pim_totals",
+    "snapshot",
+    "to_prometheus",
+    "write_metrics",
+]

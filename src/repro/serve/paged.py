@@ -46,6 +46,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -55,6 +56,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.dist import MULTIPOD_SERVE_RULES, axis_rules
 from repro.models import transformer as T
+from repro.obs.serve import NULL_TELEMETRY
 from repro.serve.scheduler import (
     ContinuousServeEngine,
     RequestOutput,
@@ -154,7 +156,7 @@ class PagedServeEngine(ContinuousServeEngine):
                  max_len: int = 512, prefill_chunk: int = 64,
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_sharing: bool = True, plans: Any = None,
-                 prefill_mesh=None, decode_mesh=None):
+                 prefill_mesh=None, decode_mesh=None, telemetry=None):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only; no decode")
         if n_slots < 1 or prefill_chunk < 1:
@@ -203,6 +205,7 @@ class PagedServeEngine(ContinuousServeEngine):
         self.slots: list[_PagedSlot | None] = [None] * n_slots
         self.queue: collections.deque = collections.deque()
         self.stats = ServeStats()
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self._seq = 0
         # host-authoritative block tables (sentinel = unmapped)
         self.tables = np.full((n_slots, max_blocks), self.layout.sentinel,
@@ -216,9 +219,9 @@ class PagedServeEngine(ContinuousServeEngine):
             lambda p, pl, st, toks, slot, row, pos0: T.prefill_chunk_paged(
                 p, cfg, st, toks, slot=slot, table_row=row, pos0=pos0,
                 paged=layout, plans=pl))
-        self._decode = jax.jit(
+        self._decode = jax.jit(self._wrap_decode(
             lambda p, pl, st, tok, tb: T.decode_step(
-                p, cfg, st, tok, plans=pl, block_tables=tb, paged=layout))
+                p, cfg, st, tok, plans=pl, block_tables=tb, paged=layout)))
         self._insert = jax.jit(
             lambda st, one, slot, row: T.insert_request_paged(
                 st, one, slot, row, layout))
@@ -261,6 +264,7 @@ class PagedServeEngine(ContinuousServeEngine):
         self.stats.blocks_in_use = used
         self.stats.peak_blocks_in_use = max(self.stats.peak_blocks_in_use,
                                             used)
+        self.tel.on_pool(used, self.stats.peak_blocks_in_use)
 
     def _drain_budget(self) -> int:
         # evicted requests recompute from scratch; in the worst case each
@@ -285,10 +289,14 @@ class PagedServeEngine(ContinuousServeEngine):
         need = self.layout.blocks_for(plen) - len(shared)
         if need > len(self.alloc.free):
             self.stats.admission_waits += 1
+            self.tel.on_admission_wait(req.uid)
             return False
         self.queue.popleft()
         blocks = [self.alloc.claim(b) for b in shared] + self.alloc.alloc(need)
         self.stats.prefix_block_hits += len(shared)
+        self.tel.on_admit(req.uid, plen)
+        if shared:
+            self.tel.on_prefix_hits(req.uid, len(shared))
         slot = _PagedSlot(req=req,
                           state1=self._template1 if self.staged_prefill
                           else None,
@@ -332,6 +340,7 @@ class PagedServeEngine(ContinuousServeEngine):
         self.queue.appendleft(slot.req)
         self.slots[j] = None
         self.stats.evictions += 1
+        self.tel.on_eviction(slot.req.uid)
 
     def _ensure_decode_block(self, i: int) -> None:
         """Grow slot ``i``'s table to cover its next write position,
@@ -363,11 +372,12 @@ class PagedServeEngine(ContinuousServeEngine):
         pressure). Host syncs are batched as in the parent engine."""
         finished: list[RequestOutput] = []
         # 1. admission
-        free_idx = [i for i, s in enumerate(self.slots) if s is None]
-        while free_idx and self.queue:
-            if not self._try_admit(free_idx[0]):
-                break                       # head waits; FIFO holds
-            free_idx.pop(0)
+        with self.tel.span("admission"):
+            free_idx = [i for i, s in enumerate(self.slots) if s is None]
+            while free_idx and self.queue:
+                if not self._try_admit(free_idx[0]):
+                    break                   # head waits; FIFO holds
+                free_idx.pop(0)
         # 2. prefill: one chunk per mid-prefill slot
         done: list[tuple[int, _PagedSlot, Any]] = []
         for i, slot in enumerate(self.slots):
@@ -378,19 +388,24 @@ class PagedServeEngine(ContinuousServeEngine):
                                            + self.prefill_chunk,
                                            prompt.shape[0])
             toks = jnp.asarray(prompt[None, lo:hi])
-            if self.staged_prefill:
-                with self._on(self.prefill_mesh):
-                    logits, slot.state1 = self._chunk(
-                        self._params_p, self._plans_p, slot.state1, toks)
-            else:
-                with self._on(self.decode_mesh):
-                    logits, self.state = self._chunk_paged(
-                        self._params_d, self._plans_d, self.state, toks,
-                        jnp.asarray(i, jnp.int32),
-                        jnp.asarray(self.tables[i]),
-                        jnp.asarray(lo, jnp.int32))
+            with self.tel.span("prefill_chunk", uid=slot.req.uid,
+                               lo=lo, hi=hi), \
+                    self.tel.annotate_step("prefill_chunk",
+                                           self.stats.prefill_chunks):
+                if self.staged_prefill:
+                    with self._on(self.prefill_mesh):
+                        logits, slot.state1 = self._chunk(
+                            self._params_p, self._plans_p, slot.state1, toks)
+                else:
+                    with self._on(self.decode_mesh):
+                        logits, self.state = self._chunk_paged(
+                            self._params_d, self._plans_d, self.state, toks,
+                            jnp.asarray(i, jnp.int32),
+                            jnp.asarray(self.tables[i]),
+                            jnp.asarray(lo, jnp.int32))
             slot.n_prefilled = hi
             self.stats.prefill_chunks += 1
+            self.tel.on_prefill_chunk(slot.req.uid, lo, hi)
             if hi == prompt.shape[0]:
                 if self.staged_prefill:
                     one = slot.state1
@@ -425,17 +440,25 @@ class PagedServeEngine(ContinuousServeEngine):
             for i in live:
                 toks[i, 0] = self.slots[i].next_tok
                 tables[i] = self.tables[i]  # non-live rows stay sentinel
-            with self._on(self.decode_mesh):
-                logits, self.state = self._decode(
-                    self._params_d, self._plans_d, self.state,
-                    jnp.asarray(toks), jnp.asarray(tables))
-            self.stats.decode_steps += 1
-            self.stats.decode_slot_tokens += len(live)
-            rows = jax.device_get(logits[:, -1, :])
-            greedy = np.argmax(rows, axis=-1)
-            for i in live:
-                slot = self.slots[i]
-                slot.host_pos += 1
-                self._commit(i, slot, self._sample(slot, rows[i],
-                                                   int(greedy[i])), finished)
+            with self.tel.span("decode_step", n_live=len(live)):
+                t0 = time.perf_counter()
+                with self.tel.annotate_step("decode_step",
+                                            self.stats.decode_steps), \
+                        self._on(self.decode_mesh):
+                    out = self._decode(
+                        self._params_d, self._plans_d, self.state,
+                        jnp.asarray(toks), jnp.asarray(tables))
+                rows, self.state = self._decode_fetch(out, len(live))
+                self.tel.observe_decode_step_seconds(
+                    time.perf_counter() - t0)
+                self.stats.decode_steps += 1
+                self.stats.decode_slot_tokens += len(live)
+                self.tel.on_decode_step(len(live))
+                greedy = np.argmax(rows, axis=-1)
+                for i in live:
+                    slot = self.slots[i]
+                    slot.host_pos += 1
+                    self._commit(i, slot,
+                                 self._sample(slot, rows[i],
+                                              int(greedy[i])), finished)
         return finished

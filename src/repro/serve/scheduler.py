@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -52,7 +53,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.models import layers as L
 from repro.models import transformer as T
+from repro.obs.serve import NULL_TELEMETRY, ServeTelemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +103,19 @@ class ServeStats:
         return 0.0 if self.decode_steps == 0 else (
             self.decode_slot_tokens / self.decode_steps)
 
+    def snapshot(self) -> dict:
+        """Every counter plus the derived utilization, as plain scalars.
+
+        This is the ONE stats schema both engines expose — the paged
+        engine shares this dataclass rather than growing its own, so
+        exporters (``repro.obs``), benchmarks, and the serve launcher
+        all read the same keys (``tests/test_obs.py`` asserts parity).
+        """
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)}
+        d["decode_utilization"] = self.decode_utilization
+        return d
+
 
 EngineStats = ServeStats   # back-compat alias (pre-paged-KV name)
 
@@ -126,7 +142,8 @@ class ContinuousServeEngine:
 
     def __init__(self, cfg: ArchConfig, params: Any, *, n_slots: int = 4,
                  max_len: int = 512, prefill_chunk: int = 64,
-                 plans: Any = None):
+                 plans: Any = None,
+                 telemetry: ServeTelemetry | None = None):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only; no decode")
         if n_slots < 1 or prefill_chunk < 1:
@@ -147,16 +164,45 @@ class ContinuousServeEngine:
         self.slots: list[_Slot | None] = [None] * n_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = ServeStats()
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self._chunk = jax.jit(
             lambda p, pl, st, toks: T.prefill_chunk(p, cfg, st, toks,
                                                     plans=pl))
-        self._decode = jax.jit(
-            lambda p, pl, st, tok: T.decode_step(p, cfg, st, tok, plans=pl))
+        self._decode = jax.jit(self._wrap_decode(
+            lambda p, pl, st, tok: T.decode_step(p, cfg, st, tok, plans=pl)))
         self._insert = jax.jit(
             lambda st, one, slot: T.insert_request(st, one, slot))
         # jax arrays are immutable, so one zero template serves every
         # admission (prefill_chunk returns fresh state pytrees)
         self._template1 = T.init_decode_state(cfg, 1, max_len)
+
+    # ---------------------------------------------------------- telemetry
+    def _wrap_decode(self, decode_fn):
+        """With PIM stats requested (``cfg.pim_mode == 'exact'`` + an
+        enabled telemetry), the jitted decode also returns the summed
+        work totals (``layers.with_pim_stats`` — the PR 7 scan-safe
+        collector), which join the iteration's one ``device_get``.
+        Decode *math* is untouched either way: greedy outputs are
+        bit-identical with telemetry on or off."""
+        self._collect_pim = self.tel.wants_pim_stats(self.cfg)
+        if not self._collect_pim:
+            return decode_fn
+        self.tel.pim_adc_bits = self.cfg.pim_adc_bits
+        return L.with_pim_stats(decode_fn)
+
+    def _decode_fetch(self, out, n_live: int):
+        """Unpack a decode-jit result: all slot logits (and the PIM work
+        totals, when collected) come back in ONE ``jax.device_get`` —
+        the same single host sync per iteration as before telemetry."""
+        if self._collect_pim:
+            logits, state, tot = out
+            rows, tot = jax.device_get((logits[:, -1, :], tot))
+            self.tel.on_pim_totals({k: int(v) for k, v in tot.items()},
+                                   n_live)
+        else:
+            logits, state = out
+            rows = jax.device_get(logits[:, -1, :])
+        return rows, state
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -171,6 +217,7 @@ class ContinuousServeEngine:
                 f"({req.max_new_tokens}) exceeds engine max_len "
                 f"({self.max_len})")
         self.queue.append(req)
+        self.tel.on_submit(req.uid)
 
     @property
     def active_uids(self) -> tuple[int, ...]:
@@ -202,6 +249,7 @@ class ContinuousServeEngine:
         """Record a generated token; retire the slot if the request is done."""
         slot.tokens.append(tok)
         slot.next_tok = tok
+        self.tel.on_token(slot.req.uid)
         reason = None
         if tok in slot.req.stop_tokens:
             reason = "stop"
@@ -215,6 +263,7 @@ class ContinuousServeEngine:
                 finish_reason=reason))
             self.slots[idx] = None
             self.stats.completed += 1
+            self.tel.on_finish(slot.req.uid, reason, len(slot.tokens))
 
     def step(self) -> list[RequestOutput]:
         """One scheduler iteration: admit → prefill one chunk → decode.
@@ -228,10 +277,13 @@ class ContinuousServeEngine:
         """
         finished: list[RequestOutput] = []
         # 1. admit queued requests into free slots
-        for i in range(self.n_slots):
-            if self.slots[i] is None and self.queue:
-                self.slots[i] = _Slot(req=self.queue.popleft(),
-                                      state1=self._template1)
+        with self.tel.span("admission"):
+            for i in range(self.n_slots):
+                if self.slots[i] is None and self.queue:
+                    req = self.queue.popleft()
+                    self.slots[i] = _Slot(req=req, state1=self._template1)
+                    self.tel.on_admit(req.uid,
+                                      int(np.asarray(req.prompt).shape[0]))
         # 2. advance each prefilling slot by one chunk
         done: list[tuple[int, _Slot, Any]] = []
         for i, slot in enumerate(self.slots):
@@ -240,11 +292,16 @@ class ContinuousServeEngine:
             prompt = np.asarray(slot.req.prompt, np.int32)
             lo = slot.n_prefilled
             hi = min(lo + self.prefill_chunk, prompt.shape[0])
-            logits, slot.state1 = self._chunk(
-                self.params, self.plans, slot.state1,
-                jnp.asarray(prompt[None, lo:hi]))
+            with self.tel.span("prefill_chunk", uid=slot.req.uid,
+                               lo=lo, hi=hi), \
+                    self.tel.annotate_step("prefill_chunk",
+                                           self.stats.prefill_chunks):
+                logits, slot.state1 = self._chunk(
+                    self.params, self.plans, slot.state1,
+                    jnp.asarray(prompt[None, lo:hi]))
             slot.n_prefilled = hi
             self.stats.prefill_chunks += 1
+            self.tel.on_prefill_chunk(slot.req.uid, lo, hi)
             if hi == prompt.shape[0]:
                 # prompt done: splice into the batch; first-token logits
                 # are committed below, after ONE batched device_get
@@ -265,16 +322,24 @@ class ContinuousServeEngine:
             toks = np.zeros((self.n_slots, 1), np.int32)
             for i in live:
                 toks[i, 0] = self.slots[i].next_tok
-            logits, self.state = self._decode(self.params, self.plans,
-                                              self.state, jnp.asarray(toks))
-            self.stats.decode_steps += 1
-            self.stats.decode_slot_tokens += len(live)
-            rows = jax.device_get(logits[:, -1, :])
-            greedy = np.argmax(rows, axis=-1)
-            for i in live:
-                slot = self.slots[i]
-                self._commit(i, slot, self._sample(slot, rows[i],
-                                                   int(greedy[i])), finished)
+            with self.tel.span("decode_step", n_live=len(live)):
+                t0 = time.perf_counter()
+                with self.tel.annotate_step("decode_step",
+                                            self.stats.decode_steps):
+                    out = self._decode(self.params, self.plans, self.state,
+                                       jnp.asarray(toks))
+                rows, self.state = self._decode_fetch(out, len(live))
+                self.tel.observe_decode_step_seconds(
+                    time.perf_counter() - t0)
+                self.stats.decode_steps += 1
+                self.stats.decode_slot_tokens += len(live)
+                self.tel.on_decode_step(len(live))
+                greedy = np.argmax(rows, axis=-1)
+                for i in live:
+                    slot = self.slots[i]
+                    self._commit(i, slot,
+                                 self._sample(slot, rows[i],
+                                              int(greedy[i])), finished)
         return finished
 
     def _drain_budget(self) -> int:
